@@ -1,0 +1,137 @@
+"""Paper Table 1: effect of %-backprop on resource utilization.
+
+Two measurements:
+  (a) measured: wall-clock fwd/bwd time + jit temp memory of a reduced
+      model on this host, sweeping the SPB suffix fraction (the literal
+      Table 1 protocol, our hardware instead of a V100);
+  (b) compiled: HLO-derived per-device FLOPs / HBM bytes / collective
+      bytes of the full-size production cell at each depth (reads cached
+      dry-run records when present).
+
+Also covers paper §4.3 (time-multiplexing overhead): sequential vs
+round-robin interleaving of jit'd train steps across models.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig, snap_depth
+from repro.configs import make_batch, reduced_config
+from repro.models import lm
+
+
+def measure_fraction_sweep(arch: str = "yi-6b", batch: int = 4,
+                           seq: int = 128, reps: int = 3) -> List[dict]:
+    cfg = reduced_config(arch).scaled(num_layers=8)
+    params = lm.init_lm(jax.random.key(0), cfg)
+    b = make_batch(cfg, batch, seq)
+    rows = []
+
+    fwd = jax.jit(lambda p, bb: lm.loss_fn(p, bb, cfg)[0])
+    fwd(params, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fwd(params, b).block_until_ready()
+    fwd_ms = (time.perf_counter() - t0) / reps * 1e3
+
+    L = cfg.num_layers
+    for pct in (100, 75, 50, 25, 12):
+        depth = snap_depth(cfg, max(1, round(L * pct / 100)))
+        g = jax.jit(lambda p, bb, d=depth: jax.grad(
+            lambda pp: lm.loss_fn(pp, bb, cfg, bwd_layers=d)[0])(p))
+        lowered = g.lower(params, b)
+        compiled = lowered.compile()
+        try:
+            temp = compiled.memory_analysis().temp_size_in_bytes / 2 ** 20
+        except Exception:       # noqa: BLE001
+            temp = float("nan")
+        out = g(params, b)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(g(params, b))
+        total_ms = (time.perf_counter() - t0) / reps * 1e3
+        rows.append({
+            "pct_backprop": pct, "depth": depth,
+            "fwd_ms": round(fwd_ms, 2),
+            "bwd_ms": round(max(total_ms - fwd_ms, 0.0), 2),
+            "total_ms": round(total_ms, 2),
+            "temp_mib": round(temp, 1),
+        })
+    return rows
+
+
+def compiled_fraction_sweep(arch: str = "yi-6b") -> List[dict]:
+    """Full-size cell HLO costs by depth — reads cached dry-run records."""
+    from repro.analysis.roofline import load_record
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    rows = []
+    for depth in (None, *sorted({snap_depth(cfg, max(1, round(
+            cfg.num_layers * p / 100))) for p in (75, 50, 25, 12)})):
+        rec = load_record(arch, "train_4k", depth=depth)
+        if rec is None:
+            continue
+        rows.append({
+            "depth": depth if depth is not None else cfg.num_layers,
+            "flops_per_dev": rec["flops_per_device"],
+            "bytes_per_dev": rec["bytes_per_device"],
+            "collective_per_dev": rec["collective_bytes_per_device"],
+        })
+    return rows
+
+
+def multiplex_overhead(reps: int = 60) -> dict:
+    """§4.3: round-robin interleaving vs sequential execution."""
+    cfgs = [reduced_config(a).scaled(num_layers=2)
+            for a in ("yi-6b", "gemma3-4b")]
+    models = []
+    for i, cfg in enumerate(cfgs):
+        params = lm.init_lm(jax.random.key(i), cfg)
+        b = make_batch(cfg, 2, 64, seed=i)
+        fn = jax.jit(lambda p, bb, c=cfg: jax.grad(
+            lambda pp: lm.loss_fn(pp, bb, c)[0])(p))
+        jax.block_until_ready(fn(params, b))
+        models.append((fn, params, b))
+
+    t0 = time.perf_counter()
+    for fn, p, b in models:
+        for _ in range(reps):
+            jax.block_until_ready(fn(p, b))
+    seq_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for fn, p, b in models:
+            jax.block_until_ready(fn(p, b))
+    rr_s = time.perf_counter() - t0
+    return {"sequential_s": round(seq_s, 3), "round_robin_s": round(rr_s, 3),
+            "overhead_pct": round(100 * (rr_s / seq_s - 1), 2)}
+
+
+def run(quick: bool = True):
+    out = []
+    rows = measure_fraction_sweep(reps=2 if quick else 5)
+    for r in rows:
+        out.append((f"table1/measured/pct{r['pct_backprop']}",
+                    r["total_ms"] * 1e3,
+                    f"fwd={r['fwd_ms']}ms bwd={r['bwd_ms']}ms "
+                    f"temp={r['temp_mib']}MiB"))
+    for r in compiled_fraction_sweep():
+        out.append((f"table1/compiled/depth{r['depth']}", 0.0,
+                    f"flops={r['flops_per_dev']:.3e} "
+                    f"bytes={r['bytes_per_dev']:.3e} "
+                    f"coll={r['collective_per_dev']:.3e}"))
+    m = multiplex_overhead(reps=10 if quick else 60)
+    out.append(("table1/multiplex_overhead", m["round_robin_s"] * 1e6,
+                f"sequential={m['sequential_s']}s overhead={m['overhead_pct']}%"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + KV-cache decode on the host mesh.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve(["--arch", args.arch, "--batch", str(args.batch),
+           "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,387 @@
+"""HLO-text cost model: per-device FLOPs / HBM bytes / collective wire bytes.
+
+Why not ``compiled.cost_analysis()``?  XLA's cost analysis visits a while
+body ONCE, ignoring the trip count.  This framework lowers every layer
+stack through ``lax.scan`` (mandatory for compile time at 94 layers), so
+cost_analysis under-counts a 94-layer model by ~94x and — worse —
+*reverses* comparisons (splitting one scan into two for SPB makes the
+"cost" go up).  We therefore parse the post-optimization HLO ourselves and
+multiply loop bodies by their trip counts, recovered from the loop
+condition's comparison constant.
+
+Conventions (documented in EXPERIMENTS.md):
+  * FLOPs: dots = 2 * result_elems * contracting_size (counted wherever
+    they appear, including inside fusions); elementwise arithmetic =
+    1 flop/output element; reduces = input elems.
+  * HBM bytes: sum of operand+result buffer sizes of ops at fusion
+    granularity (entry / loop-body / branch computations; fusion interiors
+    are on-chip).  This matches XLA's own "bytes accessed" convention.
+  * Collective wire bytes per device (ring model on group size n):
+      all-reduce       2*(n-1)/n * bytes
+      all-gather         (n-1)/n * bytes(result)
+      reduce-scatter     (n-1)/n * bytes(operand)
+      all-to-all         (n-1)/n * bytes
+      collective-permute          bytes
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "sqrt", "rsqrt", "cbrt", "power", "compare", "select", "and",
+    "or", "xor", "not", "sine", "cosine", "tan", "atan2", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "remainder",
+    "shift-left", "shift-right-arithmetic", "shift-right-logical", "clamp",
+    "is-finite", "clz", "popcnt", "erf", "logistic",
+}
+
+FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "rng-get-and-update-state",
+    "get-dimension-size", "add-dependency", "opt-barrier",
+}
+
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+
+
+def shape_elems(type_str: str) -> float:
+    """Total elements across all array shapes in a (possibly tuple) type."""
+    total = 0.0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)   # %name -> type
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """Split 'a, %b), attrs...' into operand list and trailing attrs."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                ops = [o.strip().lstrip("%") for o in _top_level_split(inner)]
+                return [o for o in ops if o], attrs
+    return [], rest
+
+
+def _top_level_split(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur)); cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if stripped.endswith("{") and ") -> " in stripped:
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        operands, attrs = _split_operands(rest)
+        op = Op(name, type_str, opcode, operands, attrs)
+        cur.ops.append(op)
+        cur.types[name] = type_str
+    return comps, entry
+
+
+def _attr(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _op_name(op: Op) -> str:
+    m = re.search(r'op_name="([^"]*)"', op.attrs)
+    return m.group(1) if m else ""
+
+
+def _attr_braces(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip count of a jax scan/fori loop: the constant the induction
+    variable is compared (LT) against in the condition computation."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    names = {cond_name}
+    # condition may delegate the compare to a wrapped fusion computation
+    for op in cond.ops:
+        called = _attr(op.attrs, "calls")
+        if called:
+            names.add(called)
+    for nm in names:
+        c = comps.get(nm)
+        if c is None:
+            continue
+        for op in c.ops:
+            if op.opcode == "constant" and op.type_str.startswith(("s32", "u32", "s64", "u64")):
+                m = re.match(r"(\-?\d+)", op.operands[0] if op.operands else "")
+                if m:
+                    consts.append(int(m.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    """Size of each replica group for a collective."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return num_partitions
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = shape_elems(op.type_str)
+    lhs_type = comp.types.get(op.operands[0], "")
+    lhs_dims = first_shape_dims(lhs_type)
+    cdims = _attr_braces(op.attrs, "lhs_contracting_dims")
+    csize = 1.0
+    if cdims and lhs_dims:
+        for i in cdims.split(","):
+            i = i.strip()
+            if i:
+                csize *= lhs_dims[int(i)]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    # flops = 2 * out_elems * (kernel spatial elems * in_channels)
+    out_elems = shape_elems(op.type_str)
+    rhs_type = comp.types.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    k_elems = shape_elems(rhs_type)
+    rhs_dims = first_shape_dims(rhs_type)
+    # kernel = spatial... x in_c x out_c ; divide out the out_c dim
+    out_c = rhs_dims[-1] if rhs_dims else 1
+    return 2.0 * out_elems * (k_elems / max(out_c, 1))
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0          # wire bytes per device
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    per_opcode_flops: Dict[str, float] = field(default_factory=dict)
+    num_collectives: int = 0
+    bytes_by_site: Dict[str, float] = field(default_factory=dict)
+    collective_by_site: Dict[str, float] = field(default_factory=dict)
+
+    def top_collectives(self, n: int = 12):
+        return sorted(self.collective_by_site.items(),
+                      key=lambda kv: -kv[1])[:n]
+
+    def add_flops(self, opcode: str, n: float):
+        self.flops += n
+        self.per_opcode_flops[opcode] = self.per_opcode_flops.get(opcode, 0.0) + n
+
+    def add_bytes(self, opcode: str, type_str: str, n: float,
+                  op_name: str = ""):
+        self.bytes += n
+        key = f"{opcode} {type_str.split('{')[0][:40]} {op_name[:72]}"
+        self.bytes_by_site[key] = self.bytes_by_site.get(key, 0.0) + n
+
+    def top_bytes(self, n: int = 15):
+        return sorted(self.bytes_by_site.items(), key=lambda kv: -kv[1])[:n]
+
+
+def analyze(text: str, num_partitions: int = 1) -> CostSummary:
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    s = CostSummary()
+    # collect computations reachable only as fusion bodies (flops-only scope)
+    visited_counts: Dict[str, float] = {}
+
+    def visit(comp_name: str, count: float, materialized: bool):
+        """materialized: ops here touch HBM (entry/loop/branch bodies)."""
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        visited_counts[comp_name] = visited_counts.get(comp_name, 0.0) + count
+        for op in comp.ops:
+            oc = op.opcode
+            # --- control flow / nested computations ---
+            if oc == "while":
+                cond = _attr(op.attrs, "condition")
+                body = _attr(op.attrs, "body")
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    visit(body, count * trips, materialized)
+                continue
+            if oc == "conditional":
+                branches = _attr_braces(op.attrs, "branch_computations")
+                names = []
+                if branches:
+                    names = [b.strip().lstrip("%") for b in branches.split(",")]
+                else:
+                    tc = _attr(op.attrs, "true_computation")
+                    fc = _attr(op.attrs, "false_computation")
+                    names = [n for n in (tc, fc) if n]
+                for b in names:     # upper bound: all branches charged
+                    visit(b, count, materialized)
+                continue
+            if oc in ("call", "async-start"):
+                tgt = _attr(op.attrs, "to_apply") or _attr(op.attrs, "calls")
+                if tgt:
+                    visit(tgt, count, materialized)
+                continue
+            if oc == "fusion":
+                tgt = _attr(op.attrs, "calls")
+                if tgt:
+                    visit(tgt, count, False)   # interior: flops yes, bytes no
+                if materialized:
+                    b = sum(shape_bytes(comp.types.get(o, "")) for o in op.operands)
+                    s.add_bytes("fusion", op.type_str,
+                                count * (b + shape_bytes(op.type_str)),
+                                _op_name(op))
+                continue
+            # --- flops ---
+            if oc == "dot":
+                s.add_flops("dot", count * _dot_flops(op, comp))
+            elif oc == "convolution":
+                s.add_flops("convolution", count * _conv_flops(op, comp))
+            elif oc in ELEMENTWISE:
+                s.add_flops(oc, count * shape_elems(op.type_str))
+            elif oc in ("reduce", "reduce-window"):
+                in_elems = sum(shape_elems(comp.types.get(o, ""))
+                               for o in op.operands[:max(1, len(op.operands) // 2)])
+                s.add_flops(oc, count * in_elems)
+            # --- collectives ---
+            if oc in COLLECTIVES:
+                n = _group_size(op.attrs, num_partitions)
+                out_b = shape_bytes(op.type_str)
+                in_b = sum(shape_bytes(comp.types.get(o, "")) for o in op.operands)
+                # XLA-CPU promotes bf16 reduction collectives to f32
+                # (convert -> f32 all-reduce -> convert, reducer named
+                # *_promoted).  TPU ICI moves the original narrow dtype;
+                # count the unpromoted width.
+                if "promoted" in op.attrs:
+                    out_b *= 0.5
+                    in_b *= 0.5
+                base = oc.replace("-start", "")
+                if base == "all-reduce":
+                    wire = 2.0 * (n - 1) / max(n, 1) * out_b
+                elif base == "all-gather":
+                    wire = (n - 1) / max(n, 1) * out_b
+                elif base == "reduce-scatter":
+                    wire = (n - 1) / max(n, 1) * in_b
+                elif base == "all-to-all":
+                    wire = (n - 1) / max(n, 1) * out_b
+                else:  # collective-permute
+                    wire = out_b
+                s.collective_bytes += count * wire
+                s.collective_breakdown[base] = (
+                    s.collective_breakdown.get(base, 0.0) + count * wire)
+                site = f"{base} {op.type_str.split('{')[0][:36]} {_op_name(op)[:64]}"
+                s.collective_by_site[site] = (
+                    s.collective_by_site.get(site, 0.0) + count * wire)
+                s.num_collectives += int(count)
+            # --- bytes (fusion-granularity HBM traffic) ---
+            if materialized and oc not in FREE_OPS and oc not in ("while", "conditional"):
+                in_b = sum(shape_bytes(comp.types.get(o, "")) for o in op.operands)
+                s.add_bytes(oc, op.type_str,
+                            count * (in_b + shape_bytes(op.type_str)),
+                            _op_name(op))
+
+    visit(entry, 1.0, True)
+    return s
+
+
+def analyze_compiled(compiled, num_partitions: int = 1) -> CostSummary:
+    return analyze(compiled.as_text(), num_partitions=num_partitions)

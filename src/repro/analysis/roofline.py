@@ -1,0 +1,205 @@
+"""Three-term roofline from the dry-run records + analytic MODEL_FLOPS.
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / LINK_BW
+
+flops/bytes come from the HLO-text cost model (analysis/hlo.py — XLA's
+cost_analysis ignores scan trip counts, see that module).  MODEL_FLOPS is
+the analytic useful-work yardstick: 6*N*D for training (N = active
+non-embedding params, D = tokens) plus exact attention-window terms;
+2*N*D for inference forward passes.  The ratio MODEL_FLOPS / HLO_FLOPs
+exposes remat/redundancy waste per cell.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.config import ModelConfig, SHAPES, ShapeConfig, layer_kinds
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter / FLOP counting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> Dict[str, float]:
+    """Total/active/embedding parameter counts from the param shapes."""
+    from repro.models import lm
+    shapes = lm.param_shapes(cfg)
+    total = active = embed = 0.0
+    moe_frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "embed" in names:
+            embed += n
+            continue
+        if ("ffn" in names and len(leaf.shape) >= 3 and cfg.moe
+                and leaf.shape[-3] == cfg.moe.num_experts):
+            active += n * moe_frac          # routed experts: top_k/E active
+        else:
+            active += n
+    return {"total": total, "active": active, "embed": embed,
+            "nonembed": total - embed}
+
+
+def _attention_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
+    """Forward attention-score+value FLOPs per token at context ctx
+    (averaged causal 1/2 factor; window layers use min(ctx, window))."""
+    fl = 0.0
+    for mixer, _ in layer_kinds(cfg):
+        if mixer in ("attn", "xdec"):
+            span = ctx / 2
+        elif mixer == "local":
+            span = min(ctx / 2, cfg.window)
+        elif mixer == "mla":
+            span = ctx / 2
+        else:
+            continue                        # ssd/rglru: linear, in params
+        if cfg.mla is not None and mixer == "mla":
+            h, dqk, dv = cfg.num_heads, (cfg.mla.qk_nope_head_dim +
+                                         cfg.mla.qk_rope_head_dim), cfg.mla.v_head_dim
+        else:
+            h, dqk, dv = cfg.num_heads, cfg.head_dim, cfg.head_dim
+        fl += 2 * span * h * (dqk + dv)
+    return fl
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                bwd_fraction: float = 1.0) -> float:
+    """Global useful FLOPs for one step of this cell.
+
+    train: (2 + 4*bwd_fraction) * N_active * tokens + attention terms
+    prefill: 2 * N_active * tokens + attention
+    decode: 2 * N_active * batch + attention over the cache
+    """
+    n = count_params(cfg)["nonembed"]
+    if cfg.moe:
+        n = count_params(cfg)["active"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        factor = 2 + 4 * bwd_fraction
+        attn = _attention_flops_per_token(cfg, S) * tokens * (
+            1 + 2 * bwd_fraction)
+        return factor * n * tokens + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        return 2 * n * tokens + _attention_flops_per_token(cfg, S) * tokens
+    # decode: one token per sequence, attention over full cache
+    attn_tok = 0.0
+    for mixer, _ in layer_kinds(cfg):
+        if mixer in ("attn", "xdec", "mla"):
+            span = S
+        elif mixer == "local":
+            span = min(S, cfg.window)
+        else:
+            continue
+        if cfg.mla is not None and mixer == "mla":
+            # absorbed decode: scores/values in latent space of rank r
+            span_cost = 2 * span * cfg.num_heads * (
+                cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                + cfg.mla.kv_lora_rank)
+        else:
+            span_cost = 2 * span * cfg.num_heads * 2 * cfg.head_dim
+        attn_tok += span_cost
+    return 2 * n * B + attn_tok * B
+
+
+# ---------------------------------------------------------------------------
+# Roofline table
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    step_s: float                 # max of the three terms
+    mfu: float                    # model_flops / (chips * peak * step_s)
+    temp_gib: float
+
+    @property
+    def bound(self) -> str:
+        return self.dominant
+
+
+def load_record(arch: str, shape: str, mesh: str = "pod16x16",
+                depth=None, tag: str = "") -> Optional[dict]:
+    d = f"__d{depth}" if depth is not None else ""
+    t = f"__{tag}" if tag else ""
+    p = RESULTS / f"{arch}__{shape}__{mesh}{d}{t}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else None
+
+
+def roofline_row(rec: dict, cfg: ModelConfig) -> RooflineRow:
+    shape = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = rec["flops_per_device"] * chips
+    step = max(terms.values())
+    mfu = mf / (chips * PEAK_FLOPS * step) if step > 0 else 0.0
+    temp = rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 2 ** 30
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        compute_s=comp, memory_s=mem, collective_s=coll, dominant=dominant,
+        model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        step_s=step, mfu=mfu, temp_gib=temp)
+
+
+def full_table(mesh: str = "pod16x16") -> List[RooflineRow]:
+    from repro.configs import cells, get_config
+    rows = []
+    for arch, shape, skip in cells():
+        rec = load_record(arch, shape, mesh)
+        if rec:
+            rows.append(roofline_row(rec, get_config(arch)))
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'chips':>5s} {'compute':>9s} "
+           f"{'memory':>9s} {'collectv':>9s} {'bound':>10s} {'MFU':>6s} "
+           f"{'useful':>7s} {'temp':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.chips:5d} {r.compute_s:9.4f} "
+            f"{r.memory_s:9.4f} {r.collective_s:9.4f} {r.dominant:>10s} "
+            f"{r.mfu:6.1%} {r.useful_ratio:7.2f} {r.temp_gib:7.2f}G")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(full_table()))

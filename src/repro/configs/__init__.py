@@ -1,0 +1,131 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants,
+input specs (ShapeDtypeStruct stand-ins, never allocated), and the
+(arch x shape) cell matrix with documented skips.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS: Dict[str, str] = {
+    "mamba2-2.7b": "mamba2_2_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "gemma3-4b": "gemma3_4b",
+    "deepseek-67b": "deepseek_67b",
+    "minicpm3-4b": "minicpm3_4b",
+    "yi-6b": "yi_6b",
+    "internvl2-26b": "internvl2_26b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).REDUCED
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+# ---------------------------------------------------------------------------
+# Cell matrix: which shapes run per arch (skips documented here + DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def shape_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-context decode needs "
+                "sub-quadratic attention (see DESIGN.md §4)")
+    return None
+
+
+def cells(include_skipped: bool = False) -> List[Tuple[str, str, Optional[str]]]:
+    """All (arch, shape, skip_reason) cells — 10 x 4 = 40 total."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            reason = shape_skip_reason(cfg, shape)
+            if reason is None or include_skipped:
+                out.append((arch, sname, reason))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for train/prefill (decode handled by serve specs).
+
+    seq_len counts the *total* sequence (frontend tokens + text for VLM);
+    enc-dec uses seq_len for both the frame encoder and the text decoder.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.enc_layers:                        # audio enc-dec
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if cfg.frontend:                          # VLM: patches + text = S
+        S_text = S - cfg.frontend_tokens
+        return {
+            "frontend": jax.ShapeDtypeStruct((B, cfg.frontend_tokens, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S_text), i32),
+            "labels": jax.ShapeDtypeStruct((B, S_text), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, shape_or_batch, seq_len: int = 0, seed: int = 0):
+    """Materialize a random batch matching input_specs (for smoke tests)."""
+    if isinstance(shape_or_batch, ShapeConfig):
+        B, S = shape_or_batch.global_batch, shape_or_batch.seq_len
+    else:
+        B, S = shape_or_batch, seq_len
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.enc_layers:
+        return {
+            "frames": jax.random.normal(k3, (B, S, cfg.d_model), dt),
+            "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.frontend:
+        S_text = S - cfg.frontend_tokens
+        return {
+            "frontend": jax.random.normal(k3, (B, cfg.frontend_tokens, cfg.d_model), dt),
+            "tokens": jax.random.randint(k1, (B, S_text), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (B, S_text), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+    }

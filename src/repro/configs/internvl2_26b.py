@@ -1,0 +1,30 @@
+"""internvl2-26b [vlm]: InternLM2-20B-class backbone, 48L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=92553; InternViT frontend is a STUB —
+``input_specs()`` provides precomputed patch embeddings.  [arXiv:2404.16821]
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    d_model=6144,
+    num_layers=48,
+    vocab_size=92553,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    pattern=("attn",),
+    frontend="vision",
+    frontend_tokens=1024,         # stub ViT patch embeddings per image
+)
+
+REDUCED = CONFIG.scaled(
+    name="internvl2-reduced", d_model=64, num_layers=4, vocab_size=512,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, frontend_tokens=8,
+    dtype="float32", attn_q_block=64, attn_kv_block=64,
+)
+
+
+def get_config() -> ModelConfig:
+    return CONFIG

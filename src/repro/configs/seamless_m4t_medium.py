@@ -1,0 +1,30 @@
+"""seamless-m4t-medium [audio]: encoder-decoder, 12L enc + 12L dec,
+d_model=1024 16H (kv=16) d_ff=4096 vocab=256206; the speech frontend is a
+STUB — ``input_specs()`` provides precomputed fbank-frame embeddings.
+[arXiv:2308.11596]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    d_model=1024,
+    num_layers=12,                # decoder
+    enc_layers=12,
+    vocab_size=256206,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    pattern=("xdec",),
+    frontend="audio",
+)
+
+REDUCED = CONFIG.scaled(
+    name="seamless-reduced", d_model=64, num_layers=2, enc_layers=2,
+    vocab_size=512, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+    dtype="float32", attn_q_block=64, attn_kv_block=64,
+)
+
+
+def get_config() -> ModelConfig:
+    return CONFIG

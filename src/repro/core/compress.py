@@ -1,0 +1,73 @@
+"""Gradient-compression baselines the paper contrasts SPB against (§1, §5).
+
+These only reduce *network* bytes — the gradients are still fully computed
+(the paper's central criticism).  Implemented so the benchmarks can compare
+resource profiles, and usable as an extra knob on the DP reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def topk_compress(g: Array, ratio: float) -> Tuple[Array, Array]:
+    """Keep the top-``ratio`` fraction by magnitude.  Returns (values, idx)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(values: Array, idx: Array, shape) -> Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), values.dtype)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+def topk_apply(g: Array, ratio: float) -> Array:
+    """Dense round-trip (what the receiving end reconstructs)."""
+    v, i = topk_compress(g, ratio)
+    return topk_decompress(v, i, g.shape)
+
+
+def randk_apply(g: Array, ratio: float, key) -> Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    idx = jax.random.choice(key, flat.size, (k,), replace=False)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx] * (1.0 / ratio))
+    return out.reshape(g.shape)
+
+
+def lowrank_apply(g: Array, rank: int, key) -> Array:
+    """PowerSGD-style single-power-iteration low-rank approximation."""
+    if g.ndim < 2:
+        return g
+    m = g.reshape(g.shape[0], -1).astype(jnp.float32)
+    q = jax.random.normal(key, (m.shape[1], rank), jnp.float32)
+    p = m @ q                                   # (r0, rank)
+    p, _ = jnp.linalg.qr(p)
+    q = m.T @ p                                 # (r1, rank)
+    approx = p @ q.T
+    return approx.reshape(g.shape).astype(g.dtype)
+
+
+def compress_tree(grads: Any, method: str, ratio: float, key) -> Any:
+    """Apply a compressor leaf-wise (dense round-trip semantics)."""
+    if method == "none":
+        return grads
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if method == "topk":
+            out.append(topk_apply(leaf, ratio))
+        elif method == "randk":
+            out.append(randk_apply(leaf, ratio, k))
+        elif method == "lowrank":
+            out.append(lowrank_apply(leaf, max(1, int(ratio * 32)), k))
+        else:
+            raise ValueError(method)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,258 @@
+"""Structured Partial Backpropagation (SPB) — the paper's core technique.
+
+Paper semantics (k workers, L layers): worker j backprops only through the
+suffix of ceil(j*L/k) layers; the PS averages each layer's gradient by the
+number of workers that computed it and rescales the LR accordingly.
+
+TPU/SPMD adaptation (see DESIGN.md §2):
+
+* ``temporal`` — the suffix depth cycles over steps/microbatches.  Depth is
+  a *static* argument of the compiled step, so XLA genuinely skips the
+  prefix backward (compute+memory+collectives).  Over one cycle of k steps
+  layer-block i receives i of k updates — the same weighted-average algebra
+  as the paper's PS, realized as per-block LR scaling.
+* ``spatial`` — paper-faithful: inside ``shard_map`` over the DP axis each
+  worker takes a ``lax.switch`` branch with its own static depth and the
+  partial gradients are aggregated with a weighted ``psum``.  Restricted to
+  DP-only meshes (the paper's parameter-server setting); used as the
+  semantics oracle and for the convergence experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import (ModelConfig, SPBConfig, combined_layer_groups,
+                          layer_groups, snap_depth, total_layers)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Depth schedules
+# ---------------------------------------------------------------------------
+
+def snapped_depths(cfg: ModelConfig, spb: SPBConfig) -> Tuple[int, ...]:
+    """The k suffix depths, snapped to achievable group/unit boundaries.
+    Depths are over the combined enc+dec stack (suffix from the output)."""
+    return tuple(snap_depth(cfg, d) for d in spb.depths(total_layers(cfg)))
+
+
+def layer_contributors(cfg: ModelConfig, spb: SPBConfig) -> Tuple[int, ...]:
+    """contributors[l] = number of depth levels whose suffix covers layer l.
+
+    Layer l (0-indexed from the input) is covered by depth d iff
+    l >= L - d.  This is the paper's "effective number of workers" for the
+    weighted average (and, temporally, the number of covering cycle steps).
+    """
+    L = total_layers(cfg)
+    depths = snapped_depths(cfg, spb)
+    return tuple(sum(1 for d in depths if l >= L - d) for l in range(L))
+
+
+@dataclasses.dataclass
+class TemporalSchedule:
+    """Cycles the k snapped depths over steps; supports warmup + rebalance."""
+    depths: Tuple[int, ...]
+    warmup_steps: int = 0
+    order: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.order:
+            # interleave deep and shallow so gradient staleness of early
+            # layers is spread evenly through the cycle
+            idx = sorted(range(len(self.depths)),
+                         key=lambda i: (-self.depths[i], i))
+            inter: List[int] = []
+            lo, hi = 0, len(idx) - 1
+            while lo <= hi:
+                inter.append(idx[lo]); lo += 1
+                if lo <= hi:
+                    inter.append(idx[hi]); hi -= 1
+            self.order = tuple(inter)
+
+    @property
+    def k(self) -> int:
+        return len(self.depths)
+
+    def depth_at(self, step: int) -> int:
+        if step < self.warmup_steps:
+            return max(self.depths)
+        return self.depths[self.order[(step - self.warmup_steps) % self.k]]
+
+    def rebalance(self, slow_positions: Sequence[int]) -> "TemporalSchedule":
+        """Straggler mitigation: move the deepest (most expensive) cycle
+        positions away from positions observed to be slow (e.g. a window
+        where a co-scheduled tenant or a degraded ICI link steals cycles)."""
+        k = self.k
+        slow = {p % k for p in slow_positions}
+        by_cost = sorted(range(k), key=lambda i: -self.depths[i])
+        positions = sorted(range(k), key=lambda p: (p in slow))  # fast first
+        new_order = [0] * k
+        for lvl, pos in zip(by_cost, positions):
+            new_order[pos] = lvl
+        return dataclasses.replace(self, order=tuple(new_order))
+
+
+def make_schedule(cfg: ModelConfig, spb: SPBConfig) -> TemporalSchedule:
+    return TemporalSchedule(snapped_depths(cfg, spb), spb.warmup_steps)
+
+
+# ---------------------------------------------------------------------------
+# Weighted aggregation (the paper's PS-side weighted average)
+# ---------------------------------------------------------------------------
+
+def group_layer_scales(cfg: ModelConfig, spb: SPBConfig) -> List[List[Array]]:
+    """Per-group, per-unit-position scale vectors (shape (count,)).
+
+    scale = k / contributors  for layers with contributors > 0, else 0.
+    Multiplying the *averaged-over-k* gradient sum by this recovers the
+    paper's weighted average; with ``spb.lr_rescale`` the optimizer applies
+    it as per-block LR scaling.
+    """
+    contrib = layer_contributors(cfg, spb)
+    k = spb.k
+    out: List[List[Array]] = []
+    off = 0
+    for unit, count in combined_layer_groups(cfg):
+        p = len(unit)
+        per_unit: List[Array] = []
+        for u in range(p):
+            idxs = [off + r * p + u for r in range(count)]
+            per_unit.append(jnp.array(
+                [k / contrib[i] if contrib[i] > 0 else 0.0 for i in idxs],
+                jnp.float32))
+        out.append(per_unit)
+        off += p * count
+    return out
+
+
+def scale_group_tree(groups_tree: List[List[Any]],
+                     scales: List[List[Array]]) -> List[List[Any]]:
+    """Multiply each stacked leaf (count, ...) by its per-layer scale."""
+    out = []
+    for gp, gs in zip(groups_tree, scales):
+        out_g = []
+        for up, s in zip(gp, gs):
+            out_g.append(jax.tree.map(
+                lambda t: t * s.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype),
+                up))
+        out.append(out_g)
+    return out
+
+
+def scale_params_tree(params: Dict[str, Any], cfg: ModelConfig,
+                      spb: SPBConfig) -> Dict[str, Any]:
+    """Apply SPB weighted-average scaling to a gradient pytree shaped like
+    the LM params ({'embed', 'groups', 'final_norm', optional 'enc'})."""
+    if spb.mode == "off" or not spb.lr_rescale:
+        return params
+    scales = group_layer_scales(cfg, spb)
+    out = dict(params)
+    if cfg.enc_layers and "enc" in params:
+        # combined groups put the single uniform encoder group first
+        enc = dict(params["enc"])
+        enc["groups"] = scale_group_tree(params["enc"]["groups"], scales[:1])
+        out["enc"] = enc
+        out["groups"] = scale_group_tree(params["groups"], scales[1:])
+    else:
+        out["groups"] = scale_group_tree(params["groups"], scales)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Spatial (paper-faithful) aggregation inside shard_map
+# ---------------------------------------------------------------------------
+
+def spatial_grads(loss_and_grad_by_level: Sequence[Callable],
+                  params, batch, *, axis_name: str, spb: SPBConfig,
+                  cfg: ModelConfig):
+    """Per-worker partial backprop + weighted psum aggregation.
+
+    ``loss_and_grad_by_level[j]`` must be a callable (params, batch) ->
+    (loss, grads) computing gradients for suffix depth ``depths[j]`` (zeros
+    for the frozen prefix).  Must run inside shard_map over ``axis_name``.
+    lax.switch executes only the taken branch per device, so per-worker
+    compute matches the paper (the deepest worker gates the iteration).
+    """
+    assert cfg.enc_layers == 0, "spatial SPB supports decoder-only stacks"
+    k = spb.k
+    n = lax.axis_size(axis_name)
+    level = lax.axis_index(axis_name) % k
+    loss, grads = lax.switch(level, list(loss_and_grad_by_level), params, batch)
+    # sum of partials over workers; each layer got contributions from
+    # contributors[l] * (n / k) workers
+    grads = lax.psum(grads, axis_name)
+    loss = lax.pmean(loss, axis_name)
+    contrib = layer_contributors(cfg, spb)
+    groups_per_layer = n / k
+
+    def scale_for(idxs):
+        return jnp.array([1.0 / (contrib[i] * groups_per_layer)
+                          if contrib[i] > 0 else 0.0 for i in idxs], jnp.float32)
+
+    scaled = dict(grads)
+    off = 0
+    new_groups = []
+    for (unit, count), gp in zip(layer_groups(cfg), grads["groups"]):
+        p = len(unit)
+        out_g = []
+        for u, up in enumerate(gp):
+            s = scale_for([off + r * p + u for r in range(count)])
+            out_g.append(jax.tree.map(
+                lambda t: t * s.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype),
+                up))
+        new_groups.append(out_g)
+        off += p * count
+    scaled["groups"] = new_groups
+    # non-layer params (embed, final norm) are computed by every worker
+    for key in grads:
+        if key not in ("groups",):
+            scaled[key] = jax.tree.map(lambda t: t / n, grads[key])
+    return loss, scaled
+
+
+def subgroup_allreduce(x: Array, axis_name: str, contributors: int,
+                       axis_size: int) -> Array:
+    """Reduce only over the last ``contributors`` workers (the ones that
+    computed this block) using axis_index_groups; everyone else keeps a
+    garbage value that the caller discards.  Cuts collective bytes for
+    prefix blocks — the paper's network saving under SPMD."""
+    if contributors >= axis_size:
+        return lax.psum(x, axis_name)
+    contributing = list(range(axis_size - contributors, axis_size))
+    rest = [[i] for i in range(axis_size - contributors)]
+    groups = rest + [contributing]
+    return lax.psum(x, axis_name, axis_index_groups=groups)
+
+
+# ---------------------------------------------------------------------------
+# Estimator used by the theory tests (Lemma 7.3 structure)
+# ---------------------------------------------------------------------------
+
+def spb_estimator(per_worker_block_grads: Array, k: int) -> Array:
+    """Numpy-level SPB estimate for the variance test.
+
+    per_worker_block_grads: (k, L, ...) per-worker per-block gradients.
+    Worker j (0-indexed) contributes blocks l >= L - ceil((j+1)L/k).
+    Returns the weighted-average estimate per block, matching the paper's
+    PS aggregation.
+    """
+    import math
+    kk, L = per_worker_block_grads.shape[:2]
+    assert kk == k
+    out = jnp.zeros_like(per_worker_block_grads[0])
+    for l in range(L):
+        c = 0
+        acc = jnp.zeros_like(per_worker_block_grads[0, l])
+        for j in range(k):
+            depth = math.ceil((j + 1) * L / k)
+            if l >= L - depth:
+                acc = acc + per_worker_block_grads[j, l]
+                c += 1
+        out = out.at[l].set(acc / max(c, 1))
+    return out

@@ -1,0 +1,142 @@
+"""Scheduling policies: JIGSAW (iteration-level RT-space packing, paper §3)
+and the gang-scheduling baselines it is evaluated against (§4.2):
+Tiresias-like (Least Attained Service), Gandiva-like (packing), FIFO.
+
+Baselines gang-schedule: all workers of a job start an iteration together
+and stay pinned to their machines (their APIs assume symmetric workers, so
+they cannot exploit SPB's variable per-worker work — the paper's point).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from repro.jigsaw.simulator import (Assignment, ClusterState, JobSpec,
+                                    Scheduler, Task)
+
+
+class JigsawScheduler(Scheduler):
+    """Iteration-level placement into the (resource x time) space.
+
+    Priority: normalized (memory x duration) product, largest first
+    (multi-resource packing a la Tetris/Graphene).  Placement: the machine
+    where the task can *start earliest*, accounting for the
+    gamma*model_size migration penalty when the worker last ran elsewhere —
+    which naturally yields machine affinity (paper §3.2).
+    """
+    name = "jigsaw"
+
+    def place(self, tasks: List[Task], state: ClusterState, now: float,
+              jobs: Dict[int, JobSpec], gamma: float) -> List[Assignment]:
+        out = []
+        free = list(state.machine_free_at)
+        maxd = max((t.duration for t in tasks), default=1.0) or 1.0
+        maxm = max((t.memory for t in tasks), default=1.0) or 1.0
+        order = sorted(
+            tasks,
+            key=lambda t: -(t.duration / maxd) * (t.memory / maxm))
+        for t in order:
+            if t.memory > state.machine_mem_gb:
+                continue
+            key = (t.job_id, t.worker_id)
+            prev = state.last_machine.get(key)
+            best_m, best_start = None, float("inf")
+            for m in range(state.num_machines):
+                start = max(free[m], t.ready_time, now)
+                if prev is not None and prev != m:
+                    start += gamma * jobs[t.job_id].model_size_gb
+                if start < best_start - 1e-12:
+                    best_start, best_m = start, m
+            if best_m is None:
+                continue
+            out.append(Assignment(t, best_m, best_start))
+            free[best_m] = best_start + t.duration
+        return out
+
+
+class _GangScheduler(Scheduler):
+    """Common machinery: whole-job gang placement with pinned workers.
+
+    A job is admitted when enough machines are simultaneously free; its
+    workers stay pinned (no migration).  Subclasses define the admission
+    order.  Workers all take the *maximum* worker duration per iteration
+    (gang barrier — idle bubbles instead of SPB exploitation, Fig 2b).
+    """
+    name = "gang"
+
+    def _order(self, job_ids: List[int], jobs: Dict[int, JobSpec],
+               state: ClusterState, now: float) -> List[int]:
+        raise NotImplementedError
+
+    def __init__(self):
+        self.pinned: Dict[Tuple[int, int], int] = {}
+        self.attained: Dict[int, float] = defaultdict(float)
+
+    def place(self, tasks: List[Task], state: ClusterState, now: float,
+              jobs: Dict[int, JobSpec], gamma: float) -> List[Assignment]:
+        by_job: Dict[int, List[Task]] = defaultdict(list)
+        for t in tasks:
+            by_job[t.job_id].append(t)
+        out = []
+        free = list(state.machine_free_at)
+        for jid in self._order(list(by_job), jobs, state, now):
+            jtasks = sorted(by_job[jid], key=lambda t: t.worker_id)
+            job = jobs[jid]
+            started = all((jid, t.worker_id) in state.last_machine
+                          for t in jtasks)
+            if started:   # workers stay pinned once running (no migration)
+                machines = [state.last_machine[(jid, t.worker_id)]
+                            for t in jtasks]
+            else:
+                order = sorted(range(state.num_machines),
+                               key=self._machine_key(free))
+                if len(order) < len(jtasks):
+                    continue
+                machines = order[:len(jtasks)]
+            start = max([free[m] for m in machines]
+                        + [now] + [t.ready_time for t in jtasks])
+            gang_dur = max(t.duration for t in jtasks)
+            for t, m in zip(jtasks, machines):
+                out.append(Assignment(t, m, start))
+                # gang barrier: machine is held for the slowest worker
+                free[m] = start + gang_dur
+            self.attained[jid] += gang_dur * len(jtasks)
+        return out
+
+    def _machine_key(self, free):
+        return lambda m: free[m]
+
+
+class TiresiasScheduler(_GangScheduler):
+    """Least Attained Service ordering (Tiresias, NSDI'19)."""
+    name = "tiresias"
+
+    def _order(self, job_ids, jobs, state, now):
+        return sorted(job_ids, key=lambda j: self.attained[j])
+
+
+class GandivaScheduler(_GangScheduler):
+    """Packing-oriented gang scheduler (Gandiva, OSDI'18, simplified):
+    admits small jobs first so they pack into gaps, machines chosen by
+    earliest availability."""
+    name = "gandiva"
+
+    def _order(self, job_ids, jobs, state, now):
+        # favor small jobs first to pack tightly
+        return sorted(job_ids, key=lambda j: (jobs[j].num_workers,
+                                              jobs[j].arrival))
+
+
+class FifoScheduler(_GangScheduler):
+    name = "fifo"
+
+    def _order(self, job_ids, jobs, state, now):
+        return sorted(job_ids, key=lambda j: jobs[j].arrival)
+
+
+ALL_SCHEDULERS = {
+    "jigsaw": JigsawScheduler,
+    "tiresias": TiresiasScheduler,
+    "gandiva": GandivaScheduler,
+    "fifo": FifoScheduler,
+}

@@ -1,0 +1,52 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` is resolved automatically: on CPU (this container) the
+kernels run in Pallas interpret mode (Python-level execution of the kernel
+body — used by the tests); on TPU they compile through Mosaic.  The
+pure-jnp blockwise implementations in ``repro.models`` remain the default
+model path on CPU so that dry-run lowering stays GSPMD-shardable; models
+opt into the kernels with ``ModelConfig.use_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.ssd import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               q_block=q_block, kv_block=kv_block,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xdt, dA, B_, C, *, chunk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_scan(xdt, dA, B_, C, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "width_block",
+                                             "interpret"))
+def rglru(a, b, *, chunk: int = 128, width_block: int = 128,
+          interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return rglru_scan(a, b, chunk=chunk, width_block=width_block,
+                      interpret=interpret)

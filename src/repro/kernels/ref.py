@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth the kernel tests assert against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose).
+They are deliberately naive — O(S^2) attention materializes the score
+matrix — so keep the shapes small in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0) -> Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H = K*G.  f32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qv = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    kv = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qv, kv) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", w, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_ref(xdt: Array, dA: Array, B_: Array, C: Array) -> Array:
+    """Sequential SSD recurrence (the definitional oracle).
+
+    xdt: (B, S, H, P) — inputs pre-multiplied by dt
+    dA:  (B, S, H)    — dt * A (negative)
+    B_, C: (B, S, H, N)
+    Returns y: (B, S, H, P) f32.
+    h_t = exp(dA_t) * h_{t-1} + B_t^T xdt_t ;  y_t = C_t h_t
+    """
+    Bb, S, H, P = xdt.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        x_t, dA_t, b_t, c_t = inp
+        h = h * jnp.exp(dA_t)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhpn", b_t, x_t)
+        y = jnp.einsum("bhn,bhpn->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (xdt.swapaxes(0, 1).astype(jnp.float32),
+          dA.swapaxes(0, 1).astype(jnp.float32),
+          B_.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1)
+
+
+def rglru_ref(a: Array, b: Array) -> Array:
+    """Sequential linear recurrence oracle.  a, b: (B, S, W) f32.
+    h_t = a_t * h_{t-1} + b_t; returns h over time."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1).astype(jnp.float32),
+                                    b.swapaxes(0, 1).astype(jnp.float32)))
+    return ys.swapaxes(0, 1)

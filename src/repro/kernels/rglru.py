@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (Griffin).
+
+h_t = a_t * h_{t-1} + b_t over (B, S, W) with a in (0,1).
+
+The recurrence is sequential in time, so the kernel follows the Griffin
+TPU design: grid (batch, width_blocks, n_chunks) with the chunk dimension
+sequential; the hidden state (1, bw) is carried in VMEM scratch.  Within a
+chunk the scan runs as a ``fori_loop`` over timesteps on (1, bw) vectors —
+VPU work with the state held in registers/VMEM, which is the right shape
+for a bandwidth-bound elementwise recurrence (there is no MXU work to do).
+Width blocks are lane-aligned (multiples of 128 at full scale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def body(t, h):
+        a_t = a_ref[0, t, :]                      # (bw,)
+        b_t = b_ref[0, t, :]
+        h = a_t[None, :] * h + b_t[None, :]
+        y_ref[0, t, :] = h[0].astype(y_ref.dtype)
+        return h
+
+    h = lax.fori_loop(0, chunk, body, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan(a, b, *, chunk: int = 128, width_block: int = 128,
+               interpret: bool = False):
+    """a, b: (B, S, W) f32.  Returns h: (B, S, W) f32."""
+    B, S, W = a.shape
+    chunk = min(chunk, S)
+    width_block = min(width_block, W)
+    assert S % chunk == 0 and W % width_block == 0
+    nc = S // chunk
+    nw = W // width_block
+
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, width_block), lambda bb, w, c: (bb, c, w)),
+            pl.BlockSpec((1, chunk, width_block), lambda bb, w, c: (bb, c, w)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, width_block),
+                               lambda bb, w, c: (bb, c, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, width_block), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+    return y

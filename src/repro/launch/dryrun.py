@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / roofline inputs.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); do not move them.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all                 # every cell, cached
+  python -m repro.launch.dryrun --arch ... --depth 16 # SPB suffix depth
+
+Results are cached as JSON under results/dryrun/ (one file per cell); use
+--force to recompute.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo as hlo_analysis
+from repro.config import SHAPES, SPBConfig, TrainConfig
+from repro.configs import (cells, decode_token_specs, get_config, input_specs,
+                           shape_skip_reason)
+from repro.dist import sharding as shd
+from repro.dist import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_path(arch: str, shape: str, mesh_name: str, depth=None,
+               tag: str = "") -> Path:
+    d = f"__d{depth}" if depth is not None else ""
+    t = f"__{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape}__{mesh_name}{d}{t}.json"
+
+
+def _mem_analysis(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+    except Exception as e:      # noqa: BLE001
+        out["error"] = str(e)
+    return out
+
+
+def _shape_overrides(cfg, shape):
+    """Bigger attention blocks for long sequences (compile-time + VMEM)."""
+    if shape.seq_len >= 32768:
+        return cfg.scaled(attn_q_block=2048, attn_kv_block=2048)
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               depth=None, remat: str = "full", zero1: bool = True,
+               rules_extra=None, cfg_overrides=None):
+    """Lower + compile one cell; returns the result record."""
+    shape = SHAPES[shape_name]
+    cfg = _shape_overrides(get_config(arch), shape)
+    if cfg.moe is not None:
+        cfg = cfg.scaled(moe=dataclasses.replace(cfg.moe, impl="ep"))
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    nchips = mesh.devices.size
+
+    rules_overrides = None
+    if shape.kind == "decode" and shape.global_batch < 16:
+        rules_overrides = {"batch": None, "kv_seq": ("data", "model")}
+    if rules_extra:
+        rules_overrides = {**(rules_overrides or {}), **rules_extra}
+
+    from repro.models.lm import REMAT
+    remat_token = REMAT.set(remat)
+    try:
+        return _lower_cell_inner(arch, shape_name, cfg, shape, mesh,
+                                 mesh_name, nchips, rules_overrides, depth,
+                                 zero1)
+    finally:
+        REMAT.reset(remat_token)
+
+
+def _lower_cell_inner(arch, shape_name, cfg, shape, mesh, mesh_name, nchips,
+                      rules_overrides, depth, zero1):
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh), shd.rules(rules_overrides):
+        if shape.kind == "train":
+            tcfg = TrainConfig(optimizer="adamw")
+            step = steps_lib.make_train_step(cfg, tcfg, SPBConfig(),
+                                             depth=depth)
+            jitted, shapes, _ = steps_lib.shard_train_step(
+                step, mesh, cfg, tcfg, zero1=zero1)
+            batch = input_specs(cfg, shape)
+            lowered = jitted.lower(shapes, batch)
+        elif shape.kind == "prefill":
+            params_shapes = lm.param_shapes(cfg)
+            cache_shapes = lm.cache_shapes(
+                cfg, shape.global_batch, shape.seq_len,
+                enc_len=shape.seq_len if cfg.enc_layers else 0)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pspec = shd.params_pspec(params_shapes)
+            cspec = shd.cache_pspec(cache_shapes)
+            bspec = shd.batch_pspec({k: v for k, v in input_specs(cfg, shape).items()
+                                     if k != "labels"})
+            ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                        is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(
+                lambda p, b, c: lm.prefill(p, b, cfg, c),
+                in_shardings=(ns(pspec), ns(bspec), ns(cspec)),
+                out_shardings=(NamedSharding(mesh, shd.spec_for(("batch", None, "vocab"))),
+                               ns(cspec)),
+                donate_argnums=(2,))
+            batch = {k: v for k, v in input_specs(cfg, shape).items()
+                     if k != "labels"}
+            lowered = fn.lower(params_shapes, batch, cache_shapes)
+        else:   # decode
+            fn, params_shapes, cache_shapes, _ = steps_lib.shard_decode_step(
+                mesh, cfg, shape.global_batch, shape.seq_len,
+                enc_len=shape.seq_len if cfg.enc_layers else 0,
+                rules_overrides=rules_overrides)
+            tokens = decode_token_specs(cfg, shape)
+            lowered = fn.lower(params_shapes, cache_shapes, tokens)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    xla_cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        xla_cost = {k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and k in
+                    ("flops", "bytes accessed", "optimal_seconds")}
+    except Exception:           # noqa: BLE001
+        pass
+
+    cost = hlo_analysis.analyze(compiled.as_text(), num_partitions=nchips)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(nchips), "depth": depth,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": cost.collective_bytes,
+        "collective_breakdown": cost.collective_breakdown,
+        "num_collectives": cost.num_collectives,
+        "per_opcode_flops": {k: v for k, v in sorted(
+            cost.per_opcode_flops.items(), key=lambda kv: -kv[1])[:8]},
+        "memory_analysis": _mem_analysis(compiled),
+        "xla_cost_analysis_unscaled": xla_cost,
+    }
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, depth=None,
+             force: bool = False, tag: str = "", **kw) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    path = _cell_path(arch, shape_name, mesh_name, depth, tag)
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, depth=depth,
+                         **kw)
+        rec["ok"] = True
+        rec["tag"] = tag
+    except Exception as e:      # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "depth": depth, "ok": False, "error": str(e),
+               "traceback": traceback.format_exc()[-4000:]}
+    path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all cells on the single-pod mesh + multi-pod pass")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="SPB suffix depth (train shapes)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for perf iters")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--no-zero1", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells(include_skipped=True):
+            if skip:
+                print(f"SKIP {arch} x {shape}: {skip}")
+                continue
+            todo.append((arch, shape, False))
+            todo.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in todo:
+        skip = shape_skip_reason(get_config(arch), SHAPES[shape])
+        if skip:
+            print(f"SKIP {arch} x {shape}: {skip}")
+            continue
+        rec = run_cell(arch, shape, multi_pod=mp, depth=args.depth,
+                       force=args.force, tag=args.tag, remat=args.remat,
+                       zero1=not args.no_zero1)
+        if rec.get("ok"):
+            ma = rec.get("memory_analysis", {})
+            print(f"OK  {arch:24s} {shape:12s} {rec['mesh']:10s} "
+                  f"compile={rec.get('compile_s', 0):7.1f}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+        else:
+            print(f"ERR {arch:24s} {shape:12s} "
+                  f"{'pod2x16x16' if mp else 'pod16x16':10s} "
+                  f"{rec['error'][:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2x16x16 = 512 chips (pod, data, model) — the 'pod' axis is an outer
+data-parallel axis whose collectives cross the inter-pod links (DCN/ICI
+per deployment); SPB's DP-axis semantics extend over ('pod', 'data').
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_config(pcfg: ParallelConfig):
+    return jax.make_mesh(
+        pcfg.mesh_shape, pcfg.mesh_axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(pcfg.mesh_axes))
+
+
+def make_host_mesh():
+    """Whatever fits the actual local devices (tests / examples): 1D data."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def parallel_config_for(mesh) -> ParallelConfig:
+    axes = tuple(mesh.axis_names)
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    return ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
+                          mesh_axes=axes, dp_axes=dp, tp_axis="model")

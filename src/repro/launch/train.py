@@ -1,0 +1,136 @@
+"""End-to-end training driver with SPB, checkpointing and auto-restart.
+
+Examples (CPU host mesh, reduced configs):
+  python -m repro.launch.train --arch yi-6b --reduced --steps 60 \\
+      --spb-mode temporal --spb-k 4 --checkpoint-dir /tmp/ckpt
+  python -m repro.launch.train --arch mamba2-2.7b --reduced --steps 30 \\
+      --batch 8 --seq 128 --optimizer sgdm
+
+Fault tolerance: the supervision loop catches step failures (and the
+``--fail-at`` injection used by tests), restores the latest checkpoint and
+resumes — on a different DP width if the device count changed (elastic).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import SPBConfig, TrainConfig
+from repro.configs import get_config, reduced_config
+from repro.core import spb as spb_lib
+from repro.data.pipeline import Pipeline
+from repro.dist import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+
+
+def build(cfg, tcfg, spb_cfg, mesh):
+    step_fns = steps_lib.build_spb_train_steps(cfg, tcfg, spb_cfg)
+    jitted = {}
+    for d, fn in step_fns.items():
+        jitted[d], shapes, _ = steps_lib.shard_train_step(fn, mesh, cfg, tcfg,
+                                                          donate=False)
+    return jitted
+
+
+def train(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--spb-mode", default="off",
+                    choices=["off", "temporal", "temporal-mb", "spatial"])
+    ap.add_argument("--spb-k", type=int, default=4)
+    ap.add_argument("--spb-warmup", type=int, default=0)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a failure at this step (tests)")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainConfig(learning_rate=args.lr, optimizer=args.optimizer,
+                       num_steps=args.steps, microbatches=args.microbatches,
+                       compression=args.compression,
+                       checkpoint_every=args.checkpoint_every,
+                       checkpoint_dir=args.checkpoint_dir, seed=args.seed)
+    spb_cfg = SPBConfig(mode=args.spb_mode, k=args.spb_k,
+                        warmup_steps=args.spb_warmup)
+    mesh = make_host_mesh()
+    mgr = (CheckpointManager(tcfg.checkpoint_dir, keep=3)
+           if tcfg.checkpoint_dir else None)
+
+    restarts = 0
+    history = []
+    while True:
+        try:
+            history = _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history)
+            break
+        except RuntimeError as e:      # noqa: PERF203
+            restarts += 1
+            print(f"[train] FAILURE: {e}; restart {restarts}", flush=True)
+            if restarts > args.max_restarts or mgr is None:
+                raise
+            args.fail_at = -1          # don't re-inject
+            args.resume = True
+    if mgr:
+        mgr.wait()
+    return history
+
+
+def _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history):
+    with jax.sharding.set_mesh(mesh):
+        jitted = build(cfg, tcfg, spb_cfg, mesh)
+        state = steps_lib.init_train_state(jax.random.key(tcfg.seed), cfg, tcfg)
+        start_step = 0
+        if args.resume and mgr and mgr.latest_step() is not None:
+            state, start_step = mgr.restore(state)
+            print(f"[train] resumed from step {start_step}", flush=True)
+
+        pipe = Pipeline(cfg, args.batch, args.seq, seed=tcfg.seed)
+        sched = (spb_lib.make_schedule(cfg, spb_cfg)
+                 if spb_cfg.mode in ("temporal",) else None)
+
+        t0 = time.time()
+        for step in range(start_step, tcfg.num_steps):
+            if step == args.fail_at:
+                raise RuntimeError("injected failure")
+            batch = pipe.get_batch(step)
+            if spb_cfg.mode == "temporal":
+                d = sched.depth_at(step)
+                fn = jitted.get(d, jitted[None])
+            elif spb_cfg.mode == "temporal-mb":
+                fn = jitted["mb"]
+            else:
+                fn = jitted[None]
+            state, metrics = fn(state, batch)
+            if step % args.log_every == 0 or step == tcfg.num_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(f"[train] step={step:5d} loss={m['loss']:.4f} "
+                      f"xent={m['xent']:.4f} gnorm={m['grad_norm']:.3f} "
+                      f"lr={m['lr']:.2e} ({time.time()-t0:.1f}s)", flush=True)
+            history.append(float(metrics["xent"]))
+            if mgr and (step + 1) % tcfg.checkpoint_every == 0:
+                mgr.save(jax.device_get(state), step + 1)
+        return history
+
+
+if __name__ == "__main__":
+    train()

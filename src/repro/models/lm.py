@@ -1,0 +1,448 @@
+"""LM assembly: heterogeneous layer stacks via scan-over-groups, SPB suffix
+splitting, KV-cache prefill/decode, encoder-decoder and modality frontends.
+
+Layer stacks are grouped into (unit, repeat) runs (``config.layer_groups``)
+so a 94-layer model lowers to a handful of ``lax.scan`` bodies.  SPB's
+static suffix depth splits the stacked parameters at a unit boundary: the
+frozen prefix runs under ``stop_gradient`` so XLA builds no backward for
+it — the paper's compute/memory/network savings, visible in compiled HLO.
+"""
+from __future__ import annotations
+
+import contextvars
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig, layer_groups, snap_depth
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+# remat policy for scanned layer bodies: 'full' | 'dots' | 'none'
+REMAT: contextvars.ContextVar[str] = contextvars.ContextVar("remat", default="full")
+
+
+def _maybe_remat(fn):
+    pol = REMAT.get()
+    if pol == "none":
+        return fn
+    if pol == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, kinds: Tuple[str, str], cfg: ModelConfig, dtype) -> Params:
+    mixer, ffn = kinds
+    keys = jax.random.split(key, 4)
+    p: Params = {"ln1": L.init_rms_norm(cfg.d_model, dtype)}
+    if mixer in ("attn", "local"):
+        p["mixer"] = L.init_attention(keys[0], cfg, dtype)
+    elif mixer == "xdec":
+        p["mixer"] = L.init_attention(keys[0], cfg, dtype)
+        p["xattn"] = L.init_cross_attention(keys[3], cfg, dtype)
+        p["lnx"] = L.init_rms_norm(cfg.d_model, dtype)
+    elif mixer == "mla":
+        p["mixer"] = L.init_mla(keys[0], cfg, dtype)
+    elif mixer == "ssd":
+        p["mixer"] = S.init_mamba2(keys[0], cfg, dtype)
+    elif mixer == "rglru":
+        p["mixer"] = S.init_rglru(keys[0], cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.d_ff > 0:
+        p["ln2"] = L.init_rms_norm(cfg.d_model, dtype)
+        if ffn == "moe":
+            p["ffn"] = M.init_moe(keys[1], cfg, dtype)
+        else:
+            p["ffn"] = L.init_ffn(keys[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_decoder_groups(key, cfg: ModelConfig) -> list:
+    dtype = _dtype(cfg)
+    groups = []
+    for gi, (unit, count) in enumerate(layer_groups(cfg)):
+        gkey = jax.random.fold_in(key, gi)
+        keys = jax.random.split(gkey, count)
+
+        def init_unit(k, unit=unit):
+            uk = jax.random.split(k, len(unit))
+            return [_init_layer(uk[u], unit[u], cfg, dtype)
+                    for u in range(len(unit))]
+
+        groups.append(jax.vmap(init_unit)(keys))
+    return groups
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {
+        "embed": L.init_embedding(k1, cfg, dtype),
+        "groups": init_decoder_groups(k2, cfg),
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if cfg.enc_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        p["enc"] = {
+            "groups": init_decoder_groups(jax.random.fold_in(k3, 1), enc_cfg),
+            "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+        }
+    return p
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.scaled(num_layers=cfg.enc_layers, pattern=("attn",),
+                      moe=None, enc_layers=0)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Layer application (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
+                 positions=None, pos=None, cache=None, enc=None,
+                 causal=True):
+    """Returns (x, aux, new_cache)."""
+    mixer, ffn = kinds
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    h = L.rms_norm(x, up["ln1"], cfg.norm_eps)
+    if mixer in ("attn", "local", "xdec"):
+        kind = "local" if mixer == "local" else "attn"
+        if mode == "train":
+            if causal:
+                o = L.attention_fwd(up["mixer"], h, cfg, kind=kind,
+                                    positions=positions)
+            else:   # bidirectional encoder: full attention, no mask
+                B, S_, _ = h.shape
+                H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+                q = (h @ up["mixer"]["wq"]).reshape(B, S_, H, Dh)
+                k = (h @ up["mixer"]["wk"]).reshape(B, S_, K, Dh)
+                v = (h @ up["mixer"]["wv"]).reshape(B, S_, K, Dh)
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+                o = L.blockwise_attention(q, k, v, causal=False,
+                                          q_block=cfg.attn_q_block,
+                                          kv_block=cfg.attn_kv_block)
+                o = o.reshape(B, S_, H * Dh) @ up["mixer"]["wo"]
+        elif mode == "prefill":
+            o, new_self = L.attention_prefill(up["mixer"], h, cfg, kind=kind,
+                                              positions=positions,
+                                              cache=cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+        else:
+            o, new_self = L.attention_decode(up["mixer"], h, cfg, kind=kind,
+                                             pos=pos, cache=cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+    elif mixer == "mla":
+        if mode == "train":
+            o = L.mla_fwd(up["mixer"], h, cfg, positions=positions)
+        elif mode == "prefill":
+            o, new_self = L.mla_prefill(up["mixer"], h, cfg,
+                                        positions=positions, cache=cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+        else:
+            o, new_self = L.mla_decode(up["mixer"], h, cfg, pos=pos,
+                                       cache=cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+    elif mixer == "ssd":
+        if mode == "train":
+            o = S.mamba2_fwd(up["mixer"], h, cfg)
+        elif mode == "prefill":
+            o, new_self = S.mamba2_prefill(up["mixer"], h, cfg, cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+        else:
+            o, new_self = S.mamba2_decode(up["mixer"], h, cfg, cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+    elif mixer == "rglru":
+        if mode == "train":
+            o = S.rglru_fwd(up["mixer"], h, cfg)
+        elif mode == "prefill":
+            o, new_self = S.rglru_prefill(up["mixer"], h, cfg, cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+        else:
+            o, new_self = S.rglru_decode(up["mixer"], h, cfg, cache["self"])
+            new_cache = dict(cache); new_cache["self"] = new_self
+    else:
+        raise ValueError(mixer)
+    x = x + o
+    # cross-attention for the enc-dec decoder
+    if mixer == "xdec":
+        hx = L.rms_norm(x, up["lnx"], cfg.norm_eps)
+        if mode == "train" or mode == "prefill":
+            xo = L.cross_attention_fwd(up["xattn"], hx, enc, cfg)
+            if mode == "prefill":
+                # cache encoder K/V for decode
+                B, T, _ = enc.shape
+                K, Dh = cfg.num_kv_heads, cfg.head_dim
+                ck = (enc @ up["xattn"]["wk"]).reshape(B, T, K, Dh)
+                cv = (enc @ up["xattn"]["wv"]).reshape(B, T, K, Dh)
+                new_cache = dict(new_cache)
+                new_cache["cross"] = {"k": ck.astype(cache["cross"]["k"].dtype),
+                                      "v": cv.astype(cache["cross"]["v"].dtype)}
+        else:
+            xo = L.cross_attention_decode(up["xattn"], hx, cfg,
+                                          (cache["cross"]["k"],
+                                           cache["cross"]["v"]))
+        x = x + xo
+    if cfg.d_ff > 0:
+        h2 = L.rms_norm(x, up["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            from repro.dist.sharding import spec_for
+            dp_spec = spec_for(("batch", None, None))
+            fo, aux = M.moe_fwd(up["ffn"], h2, cfg, ep_axis="model",
+                                dp_spec=dp_spec)
+        else:
+            fo = L.ffn_fwd(up["ffn"], h2)
+        x = x + fo
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Group scans
+# ---------------------------------------------------------------------------
+
+def _run_group_train(x, aux, gparams, unit, cfg, positions, *, enc=None,
+                     causal=True):
+    def body(carry, up):
+        xx, aa = carry
+        for u in range(len(unit)):
+            xx, a_u, _ = _apply_layer(xx, up[u], unit[u], cfg, mode="train",
+                                      positions=positions, enc=enc,
+                                      causal=causal)
+            aa = aa + a_u
+        return (xx, aa), None
+
+    (x, aux), _ = lax.scan(_maybe_remat(body), (x, aux), gparams)
+    return x, aux
+
+
+def _run_group_cached(x, gparams, gcache, unit, cfg, *, mode, positions=None,
+                      pos=None, enc=None):
+    def body(carry, xs):
+        up, cu = xs
+        xx = carry
+        new_cu = []
+        for u in range(len(unit)):
+            xx, _, nc = _apply_layer(xx, up[u], unit[u], cfg, mode=mode,
+                                     positions=positions, pos=pos,
+                                     cache=cu[u], enc=enc)
+            new_cu.append(nc)
+        return xx, new_cu
+
+    x, new_cache = lax.scan(body, x, (gparams, gcache))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss (train path with SPB suffix splitting)
+# ---------------------------------------------------------------------------
+
+def _split_group(gparams, n_frozen_units: int):
+    frozen = jax.tree.map(lambda t: t[:n_frozen_units], gparams)
+    live = jax.tree.map(lambda t: t[n_frozen_units:], gparams)
+    return frozen, live
+
+
+def _stack_groups(params: Params, cfg: ModelConfig):
+    """(groups, layer_group spec, offsets) for decoder (+ encoder) stacks."""
+    specs = list(layer_groups(cfg))
+    offs = []
+    n = 0
+    for unit, count in specs:
+        offs.append(n)
+        n += len(unit) * count
+    return specs, offs
+
+
+def forward_train(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+                  *, bwd_layers: Optional[int] = None
+                  ) -> Tuple[Array, Array]:
+    """Returns (logits, moe_aux).  batch: tokens (B,S) [+ frontend embeds /
+    frames].  ``bwd_layers`` = SPB suffix depth (None = full backprop)."""
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    enc_out = None
+    total_L = cfg.num_layers + cfg.enc_layers
+    depth = total_L if bwd_layers is None else bwd_layers
+    boundary = total_L - depth          # first differentiable flat layer idx
+
+    aux = jnp.zeros((), jnp.float32)
+
+    # --- encoder (flat layers [0, enc_layers)) ---
+    if cfg.enc_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        frames = batch["frames"].astype(_dtype(cfg))
+        enc_x = shard(frames, "batch", "seq", "embed")
+        enc_pos = jnp.arange(frames.shape[1])
+        enc_x, aux = _run_stack(enc_x, aux, params["enc"]["groups"], enc_cfg,
+                                enc_pos, boundary, 0, causal=False)
+        enc_out = L.rms_norm(enc_x, params["enc"]["final_norm"], cfg.norm_eps)
+        dec_boundary_base = cfg.enc_layers
+    else:
+        dec_boundary_base = 0
+
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.frontend and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    x, aux = _run_stack(x, aux, params["groups"], cfg, positions,
+                        boundary, dec_boundary_base, enc=enc_out, causal=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend and "frontend" in batch:
+        x = x[:, -S_text:]
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+def _run_stack(x, aux, groups, cfg, positions, boundary, base, *, enc=None,
+               causal=True):
+    """Run all groups of a stack, freezing flat layers < boundary."""
+    specs, offs = _stack_groups({}, cfg)
+    for (unit, count), off, gparams in zip(specs, offs, groups):
+        p = len(unit)
+        lo, hi = base + off, base + off + p * count
+        if boundary >= hi:          # fully frozen group
+            sg = jax.tree.map(lax.stop_gradient, gparams)
+            x, aux = _run_group_train(lax.stop_gradient(x), aux, sg, unit,
+                                      cfg, positions, enc=enc, causal=causal)
+        elif boundary <= lo:        # fully differentiable
+            x, aux = _run_group_train(x, aux, gparams, unit, cfg, positions,
+                                      enc=enc, causal=causal)
+        else:                       # split at a unit boundary
+            q = (boundary - lo) // p
+            frozen, live = _split_group(gparams, q)
+            sg = jax.tree.map(lax.stop_gradient, frozen)
+            x, aux = _run_group_train(lax.stop_gradient(x), aux, sg, unit,
+                                      cfg, positions, enc=enc, causal=causal)
+            x, aux = _run_group_train(x, aux, live, unit, cfg, positions,
+                                      enc=enc, causal=causal)
+    return x, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            *, bwd_layers: Optional[int] = None, aux_weight: float = 0.01
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward_train(params, batch, cfg, bwd_layers=bwd_layers)
+    xent = L.softmax_xent(logits, batch["labels"], valid_vocab=cfg.vocab_size)
+    loss = xent + aux_weight * aux
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV cache: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(kinds, cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int, dtype) -> Params:
+    mixer, _ = kinds
+    if mixer in ("attn", "local"):
+        return {"self": L.init_attention_cache(cfg, batch, max_len, mixer, dtype)}
+    if mixer == "xdec":
+        return {
+            "self": L.init_attention_cache(cfg, batch, max_len, "attn", dtype),
+            "cross": {
+                "k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            },
+        }
+    if mixer == "mla":
+        return {"self": L.init_mla_cache(cfg, batch, max_len, dtype)}
+    if mixer == "ssd":
+        return {"self": S.init_mamba2_cache(cfg, batch, dtype)}
+    if mixer == "rglru":
+        return {"self": S.init_rglru_cache(cfg, batch, dtype)}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Params:
+    dtype = _dtype(cfg)
+    groups = []
+    for unit, count in layer_groups(cfg):
+        def one(_, unit=unit):
+            return [_init_layer_cache(unit[u], cfg, batch, max_len, enc_len, dtype)
+                    for u in range(len(unit))]
+        groups.append(jax.vmap(one)(jnp.arange(count)))
+    return {"groups": groups, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            cache: Params) -> Tuple[Array, Params]:
+    """Fill the cache from a prompt; returns (last-token logits, cache)."""
+    enc_out = None
+    if cfg.enc_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        frames = batch["frames"].astype(_dtype(cfg))
+        enc_pos = jnp.arange(frames.shape[1])
+        ex = frames
+        aux = jnp.zeros((), jnp.float32)
+        for (unit, count), gp in zip(layer_groups(enc_cfg),
+                                     params["enc"]["groups"]):
+            ex, aux = _run_group_train(ex, aux, gp, unit, enc_cfg, enc_pos,
+                                       causal=False)
+        enc_out = L.rms_norm(ex, params["enc"]["final_norm"], cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.frontend and "frontend" in batch:
+        x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    new_groups = []
+    for (unit, count), gp, gc in zip(layer_groups(cfg), params["groups"],
+                                     cache["groups"]):
+        x, nc = _run_group_cached(x, gp, gc, unit, cfg, mode="prefill",
+                                  positions=positions, enc=enc_out)
+        new_groups.append(nc)
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"groups": new_groups,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params: Params, cache: Params, tokens: Array,
+                cfg: ModelConfig) -> Tuple[Array, Params]:
+    """One-token decode.  tokens: (B, 1).  Position comes from cache['pos']."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens, cfg)
+    x = shard(x, "batch", None, "embed")
+    new_groups = []
+    for (unit, count), gp, gc in zip(layer_groups(cfg), params["groups"],
+                                     cache["groups"]):
+        x, nc = _run_group_cached(x, gp, gc, unit, cfg, mode="decode", pos=pos)
+        new_groups.append(nc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"groups": new_groups, "pos": pos + 1}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, enc_len))

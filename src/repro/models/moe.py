@@ -1,0 +1,221 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing.
+
+Two interchangeable implementations:
+
+* ``dense`` — every expert computes every token, combined by the routing
+  weights.  Exact, simple, O(E) compute: used for smoke tests / small E and
+  as the oracle for the EP path.
+* ``ep``    — production expert-parallel path: tokens are routed, sorted by
+  expert, packed into fixed-capacity per-expert buffers, exchanged with
+  ``all_to_all`` over the tensor/expert axis inside ``shard_map``, computed
+  by the local experts, and returned.  This is the path the multi-pod
+  dry-run exercises; its collectives are what the roofline's collective
+  term measures for MoE architectures.
+
+Both return ``(out, aux_loss)`` where aux_loss is the Switch-style load
+balancing loss E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models.layers import dense_init, ffn_fwd, init_ffn
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    m: MoEConfig = cfg.moe
+    keys = jax.random.split(key, 5)
+    D, E, F = cfg.d_model, m.num_experts, m.d_ff_expert
+    p = {
+        "router": dense_init(keys[0], (D, E), 0, jnp.float32),
+        "wg": dense_init(keys[1], (E, D, F), 1, dtype),
+        "wu": dense_init(keys[2], (E, D, F), 1, dtype),
+        "wd": dense_init(keys[3], (E, F, D), 1, dtype),
+    }
+    if m.num_shared:
+        p["shared"] = init_ffn(keys[4], D, m.num_shared * F, dtype)
+    return p
+
+
+def _route(xf: Array, router: Array, m: MoEConfig) -> Tuple[Array, Array, Array]:
+    """Top-k routing.  xf: (N, D).  Returns (weights (N,k), idx (N,k), aux)."""
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    topv, topi = lax.top_k(probs, m.top_k)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    E = router.shape[1]
+    f = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    P = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * P)
+    return topv, topi, aux
+
+
+# ---------------------------------------------------------------------------
+# Dense (exact) path
+# ---------------------------------------------------------------------------
+
+def moe_fwd_dense(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    topv, topi, aux = _route(xf, p["router"], m)
+    # all experts on all tokens (exact; O(E) compute — small-scale only)
+    g = jnp.einsum("nd,edf->enf", xf, p["wg"])
+    u = jnp.einsum("nd,edf->enf", xf, p["wu"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("enf,efd->end", h, p["wd"])                 # (E, N, D)
+    combine = jnp.zeros((xf.shape[0], m.num_experts), x.dtype)
+    combine = combine.at[jnp.arange(xf.shape[0])[:, None], topi].add(
+        topv.astype(x.dtype))
+    out = jnp.einsum("ne,end->nd", combine, y)
+    if m.num_shared:
+        out = out + ffn_fwd(p["shared"], xf)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path (shard_map over the tp axis acting as the EP axis)
+# ---------------------------------------------------------------------------
+
+def _moe_ep_local(xl: Array, p: Params, cfg: ModelConfig, ep_axis: str):
+    """Body run per-device inside shard_map.
+
+    xl: (N_loc, D) — this rank's slice of the local tokens.
+    expert weights in p are the local shard (E_loc, D, F).
+    """
+    m: MoEConfig = cfg.moe
+    E = m.num_experts
+    ep = lax.axis_size(ep_axis)
+    E_loc = E // ep
+    N, D = xl.shape
+    k = m.top_k
+    topv, topi, aux = _route(xl, p["router"], m)
+
+    nk = N * k
+    eid = topi.reshape(nk)
+    wgt = topv.reshape(nk)
+    tok = jnp.repeat(jnp.arange(N), k)
+
+    order = jnp.argsort(eid)
+    eid_s, wgt_s, tok_s = eid[order], wgt[order], tok[order]
+
+    C = max(1, int(math.ceil(nk / E * m.capacity_factor)))
+    # position of each routed slot within its expert
+    onehot = jax.nn.one_hot(eid_s, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(nk), eid_s]
+    keep = pos < C
+    slot = jnp.where(keep, eid_s * C + pos, E * C)             # E*C = drop bin
+
+    send = jnp.zeros((E * C + 1, D), xl.dtype).at[slot].add(xl[tok_s])
+    send = send[:-1].reshape(ep, E_loc, C, D)
+    recv = lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0)
+    # recv[src, e_loc, C, D] -> per local expert: (E_loc, ep*C, D)
+    xin = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, D)
+
+    g = jnp.einsum("ecd,edf->ecf", xin, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", xin, p["wu"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+
+    yb = y.reshape(E_loc, ep, C, D).transpose(1, 0, 2, 3)
+    back = lax.all_to_all(yb, ep_axis, split_axis=0, concat_axis=0)
+    back = back.reshape(E * C, D)
+    back = jnp.concatenate([back, jnp.zeros((1, D), back.dtype)], axis=0)
+    contrib = back[slot] * wgt_s[:, None].astype(back.dtype)    # (nk, D)
+    routed = jax.ops.segment_sum(contrib, tok_s, num_segments=N)
+
+    out = routed
+    if m.num_shared:
+        out = out + ffn_fwd(p["shared"], xl)
+    return out, lax.pmean(aux, ep_axis)
+
+
+def _moe_ep_small(xf: Array, p: Params, cfg: ModelConfig, ep_axis: str):
+    """Decode-path EP: too few tokens to slice over the expert axis.
+
+    Every rank routes all local tokens; each rank computes only the
+    experts it owns (dense within the local expert shard — trivial at
+    decode token counts) and the partial outputs are psum'd.
+    """
+    m: MoEConfig = cfg.moe
+    E = m.num_experts
+    ep = lax.axis_size(ep_axis)
+    r = lax.axis_index(ep_axis)
+    E_loc = E // ep
+    N, D = xf.shape
+    topv, topi, aux = _route(xf, p["router"], m)
+    # combine weights restricted to this rank's experts
+    e0 = r * E_loc
+    combine = jnp.zeros((N, E_loc), xf.dtype)
+    for kk in range(m.top_k):
+        idx = topi[:, kk] - e0
+        ok = (idx >= 0) & (idx < E_loc)
+        combine = combine.at[jnp.arange(N), jnp.clip(idx, 0, E_loc - 1)].add(
+            jnp.where(ok, topv[:, kk], 0.0).astype(xf.dtype))
+    g = jnp.einsum("nd,edf->enf", xf, p["wg"])
+    u = jnp.einsum("nd,edf->enf", xf, p["wu"])
+    y = jnp.einsum("enf,efd->end", jax.nn.silu(g) * u, p["wd"])
+    part = jnp.einsum("ne,end->nd", combine, y)
+    out = lax.psum(part, ep_axis)
+    if m.num_shared:
+        out = out + ffn_fwd(p["shared"], xf)
+    return out, lax.pmean(aux, ep_axis)
+
+
+def moe_fwd_ep(p: Params, x: Array, cfg: ModelConfig, *, ep_axis: str,
+               dp_spec) -> Tuple[Array, Array]:
+    """Expert-parallel MoE.  x: (B, S, D) sharded over dp axes.
+
+    Inside shard_map each (dp, ep) rank routes and dispatches a distinct
+    token slice; expert weights are sharded over ``ep_axis``.  When there
+    are too few local tokens to slice (decode), the small-batch path
+    computes local experts densely and psums partials instead.
+    """
+    from jax.sharding import PartitionSpec as P
+    m: MoEConfig = cfg.moe
+    dp_axes = dp_spec[0] if dp_spec is not None and len(dp_spec) else None
+
+    def body(xb, router, wg, wu, wd, shared):
+        B_loc, S, D = xb.shape
+        xf = xb.reshape(-1, D)
+        ep = lax.axis_size(ep_axis)
+        pl = {"router": router, "wg": wg, "wu": wu, "wd": wd}
+        if shared is not None:
+            pl["shared"] = shared
+        if xf.shape[0] < ep * 4:      # decode / tiny batches
+            out, aux = _moe_ep_small(xf, pl, cfg, ep_axis)
+            return out.reshape(B_loc, S, D), aux[None, None]
+        r = lax.axis_index(ep_axis)
+        n = xf.shape[0] // ep
+        xs = lax.dynamic_slice_in_dim(xf, r * n, n)
+        out, aux = _moe_ep_local(xs, pl, cfg, ep_axis)
+        full = lax.all_gather(out, ep_axis, axis=0, tiled=True)   # (N_loc, D)
+        # aux is a per-(dp, ep) shard scalar: emit as a sharded (dp, ep)
+        # grid so the caller can take an exact global mean.
+        return full.reshape(B_loc, S, D), aux[None, None]
+
+    shared = p.get("shared")
+    in_specs = (dp_spec, P(), P(ep_axis), P(ep_axis), P(ep_axis),
+                None if shared is None else P())
+    out_specs = (dp_spec, P(dp_axes, ep_axis))
+    fn = jax.shard_map(body, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    out, aux = fn(x, p["router"], p["wg"], p["wu"], p["wd"], shared)
+    return out, jnp.mean(aux)
+
+
+def moe_fwd(p: Params, x: Array, cfg: ModelConfig, *, ep_axis: str = "model",
+            dp_spec=None) -> Tuple[Array, Array]:
+    m: MoEConfig = cfg.moe
+    if m.impl == "ep":
+        return moe_fwd_ep(p, x, cfg, ep_axis=ep_axis, dp_spec=dp_spec)
+    return moe_fwd_dense(p, x, cfg)

@@ -1,0 +1,109 @@
+"""Optimizers: SGD+momentum (the paper's setting) and AdamW, hand-rolled.
+
+Features needed by the framework:
+  * SPB per-block LR scaling (the paper's weighted-average aggregation,
+    applied as update scaling — see core/spb.py).
+  * Mixed precision: bf16 params keep f32 master copies in the optimizer
+    state; all moments are f32.
+  * Global-norm gradient clipping, decoupled weight decay, warmup+cosine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SPBConfig, TrainConfig
+from repro.core import spb as spb_lib
+
+Array = jax.Array
+
+
+def lr_at(tcfg: TrainConfig, step: Array) -> Array:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(tcfg.warmup_steps, 1))
+    total = max(tcfg.num_steps, 1)
+    frac = jnp.clip(step / total, 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return tcfg.learning_rate * warm * cos
+
+
+def _f32(t):
+    return t.astype(jnp.float32)
+
+
+def init_opt_state(params, tcfg: TrainConfig) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), p)
+    state: Dict[str, Any] = {}
+    if tcfg.optimizer == "adamw":
+        state["mu"] = zeros(params)
+        state["nu"] = zeros(params)
+    elif tcfg.optimizer == "sgdm":
+        state["mom"] = zeros(params)
+    else:
+        raise ValueError(tcfg.optimizer)
+    # master copies only if params are low-precision
+    needs_master = any(l.dtype != jnp.float32
+                       for l in jax.tree.leaves(params))
+    if needs_master:
+        state["master"] = jax.tree.map(_f32, params)
+    return state
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(_f32(l)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state, step: Array, tcfg: TrainConfig,
+                  cfg: Optional[ModelConfig] = None,
+                  spb_cfg: Optional[SPBConfig] = None
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
+    """One optimizer step.  Returns (params, opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    if tcfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: _f32(g) * scale, grads)
+    else:
+        grads = jax.tree.map(_f32, grads)
+
+    # SPB weighted-average / per-block LR scaling (paper §2)
+    if spb_cfg is not None and cfg is not None and spb_cfg.mode != "off":
+        grads = spb_lib.scale_params_tree(grads, cfg, spb_cfg)
+
+    lr = lr_at(tcfg, step)
+    master = opt_state.get("master", params)
+    new_state = dict(opt_state)
+
+    if tcfg.optimizer == "adamw":
+        t = step.astype(jnp.float32) + 1.0
+        b1, b2 = tcfg.beta1, tcfg.beta2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          opt_state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          opt_state["nu"], grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** t), nu)
+        upd = jax.tree.map(
+            lambda m, v: m / (jnp.sqrt(v) + tcfg.eps), mu_hat, nu_hat)
+        new_master = jax.tree.map(
+            lambda p, u: _f32(p) - lr * (u + tcfg.weight_decay * _f32(p)),
+            master, upd)
+        new_state["mu"], new_state["nu"] = mu, nu
+    else:  # sgdm (paper: SGD with momentum + 1e-4 weight decay)
+        mom = jax.tree.map(lambda m, g, p: tcfg.momentum * m + g
+                           + tcfg.weight_decay * _f32(p),
+                           opt_state["mom"], grads, master)
+        new_master = jax.tree.map(lambda p, m: _f32(p) - lr * m, master, mom)
+        new_state["mom"] = mom
+
+    if "master" in opt_state:
+        new_state["master"] = new_master
+        new_params = jax.tree.map(lambda p, m: m.astype(p.dtype),
+                                  params, new_master)
+    else:
+        new_params = jax.tree.map(lambda p, m: m.astype(p.dtype),
+                                  params, new_master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

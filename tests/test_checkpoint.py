@@ -1,0 +1,98 @@
+"""Checkpoint manager: roundtrip, atomicity, keep-N GC, async writes,
+resume semantics, and elastic restore (different DP width)."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import TrainConfig
+from repro.configs import make_batch, reduced_config
+from repro.dist import steps as steps_lib
+
+
+@pytest.fixture()
+def state():
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig()
+    return steps_lib.init_train_state(jax.random.key(0), cfg, tcfg)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path, state):
+    mgr = CheckpointManager(tmp_path, keep=3, async_write=False)
+    mgr.save(state, 10)
+    restored, step = mgr.restore(state)
+    assert step == 10
+    _trees_equal(state, restored)
+
+
+def test_async_and_keep_n(tmp_path, state):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(state, s)
+    mgr.wait()
+    assert mgr.steps() == [3, 4]
+    # no tmp litter
+    assert not list(Path(tmp_path).glob(".tmp_*"))
+
+
+def test_restore_specific_step(tmp_path, state):
+    mgr = CheckpointManager(tmp_path, keep=5, async_write=False)
+    mgr.save(state, 1)
+    bumped = dict(state)
+    bumped["step"] = state["step"] + 41
+    mgr.save(bumped, 42)
+    _, s1 = mgr.restore(state, step=1)
+    _, s2 = mgr.restore(state)
+    assert (s1, s2) == (1, 42)
+
+
+def test_shape_mismatch_raises(tmp_path, state):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save(state, 1)
+    other = reduced_config("gemma3-4b")
+    other_state = steps_lib.init_train_state(
+        jax.random.key(0), other, TrainConfig())
+    with pytest.raises((ValueError, KeyError)):
+        mgr.restore(other_state)
+
+
+def test_manifest_contents(tmp_path, state):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save(state, 7)
+    man = json.loads((Path(tmp_path) / "step_7" / "manifest.json").read_text())
+    assert man["step"] == 7 and man["num_arrays"] > 10 and man["bytes"] > 0
+
+
+def test_elastic_restore_changes_sharding(tmp_path, state):
+    """Checkpoints store unsharded arrays: restoring under a different
+    'mesh' (here: different device_put target) keeps values identical."""
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save(state, 5)
+    shardings = jax.tree.map(lambda _: jax.devices()[0], state)
+    restored, _ = mgr.restore(state, shardings=shardings)
+    _trees_equal(state, restored)
+
+
+def test_train_resume_matches_uninterrupted(tmp_path):
+    """Fault-tolerance end-to-end: train 8 steps straight vs train 4 +
+    crash + restore + 4 — identical final loss (deterministic pipeline)."""
+    from repro.launch import train as train_mod
+
+    args = ["--arch", "yi-6b", "--steps", "8", "--batch", "2", "--seq", "32",
+            "--checkpoint-every", "4", "--log-every", "100"]
+    h_straight = train_mod.train(args + ["--checkpoint-dir",
+                                         str(tmp_path / "a")])
+    h_failed = train_mod.train(args + ["--checkpoint-dir",
+                                       str(tmp_path / "b"), "--fail-at", "5"])
+    np.testing.assert_allclose(h_straight[-1], h_failed[-1], rtol=1e-5)

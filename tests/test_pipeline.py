@@ -1,0 +1,49 @@
+"""Pipeline parallelism: GPipe schedule == sequential oracle on 4
+simulated stage devices (subprocess: device count locks at jax init)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert bubble_fraction(4, 28) == pytest.approx(3 / 31)
+
+
+_PP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.pipeline import pipeline_apply, sequential_reference
+
+    S, M, mb, D = 4, 8, 2, 16
+    key = jax.random.key(0)
+    params = jax.random.normal(key, (S, D, D)) / jnp.sqrt(D)
+    xs = jax.random.normal(jax.random.key(1), (M, mb, D))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    mesh = jax.make_mesh((4,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with jax.sharding.set_mesh(mesh):
+        out = jax.jit(lambda p, x: pipeline_apply(stage_fn, p, x))(params, xs)
+    want = sequential_reference(stage_fn, params, xs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    print("PP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential_on_4_devices():
+    r = subprocess.run([sys.executable, "-c", _PP_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "PP_OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"

@@ -1,0 +1,151 @@
+"""SPB core semantics: suffix-gradient exactness, weighted aggregation,
+schedules, and the Lemma 7.3 variance structure."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SPBConfig, layer_groups, snap_depth, total_layers
+from repro.configs import make_batch, reduced_config
+from repro.core import spb as spb_lib
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("yi-6b")          # 4 uniform layers
+    params = lm.init_lm(jax.random.key(0), cfg)
+    batch = make_batch(cfg, 2, 64)
+    return cfg, params, batch
+
+
+def _grads(cfg, params, batch, depth):
+    return jax.grad(lambda p: lm.loss_fn(p, batch, cfg,
+                                         bwd_layers=depth)[0])(params)
+
+
+def test_suffix_grads_exact(setup):
+    """Partial backprop: prefix grads are exactly zero and suffix grads
+    match full backprop exactly (the gradient of suffix params never
+    depends on prefix backward)."""
+    cfg, params, batch = setup
+    g_full = _grads(cfg, params, batch, None)
+    for depth in (1, 2, 3):
+        g = _grads(cfg, params, batch, depth)
+        wq_f = np.asarray(g_full["groups"][0][0]["mixer"]["wq"])
+        wq_p = np.asarray(g["groups"][0][0]["mixer"]["wq"])
+        b = cfg.num_layers - depth
+        assert np.abs(wq_p[:b]).max() == 0.0
+        np.testing.assert_allclose(wq_p[b:], wq_f[b:], rtol=2e-5, atol=1e-7)
+
+
+def test_depth_snapping_patterned():
+    cfg = reduced_config("gemma3-4b")      # pattern length 4, 8 layers
+    p = len(cfg.pattern)
+    for d in range(1, cfg.num_layers + 1):
+        s = snap_depth(cfg, d)
+        assert s >= d                       # snaps up (never less backprop)
+        assert (cfg.num_layers - s) % p == 0 or s == cfg.num_layers
+
+
+def test_depth_snapping_encdec():
+    cfg = reduced_config("seamless-m4t-medium")
+    L = total_layers(cfg)
+    for d in range(1, L + 1):
+        s = snap_depth(cfg, d)
+        assert 1 <= s <= L and s >= d
+
+
+def test_contributors_monotone(setup):
+    cfg, _, _ = setup
+    spb = SPBConfig(mode="temporal", k=4)
+    c = spb_lib.layer_contributors(cfg, spb)
+    assert list(c) == sorted(c)             # later layers >= contributors
+    assert c[-1] == spb.k                   # last layer updated by all
+    assert all(v >= 1 for v in c)
+
+
+def test_group_scales_match_contributors(setup):
+    cfg, _, _ = setup
+    spb = SPBConfig(mode="temporal", k=4)
+    contrib = spb_lib.layer_contributors(cfg, spb)
+    scales = spb_lib.group_layer_scales(cfg, spb)
+    flat = np.asarray(scales[0][0])
+    for l in range(cfg.num_layers):
+        assert flat[l] == pytest.approx(spb.k / contrib[l])
+
+
+@given(k=st.integers(1, 8), L=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_depths_property(k, L):
+    spb = SPBConfig(mode="temporal", k=k)
+    depths = spb.depths(L)
+    assert len(depths) == k
+    assert depths[-1] == L                  # deepest worker does everything
+    assert all(1 <= d <= L for d in depths)
+    assert list(depths) == sorted(depths)
+
+
+@given(k=st.integers(2, 6), warmup=st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_temporal_schedule_cycle(k, warmup):
+    depths = tuple(range(1, k + 1))
+    sched = spb_lib.TemporalSchedule(depths, warmup_steps=warmup)
+    # warmup steps use max depth
+    for s in range(warmup):
+        assert sched.depth_at(s) == k
+    # one full cycle covers every depth exactly once
+    cyc = [sched.depth_at(warmup + i) for i in range(k)]
+    assert sorted(cyc) == list(depths)
+
+
+def test_rebalance_moves_deep_off_slow():
+    sched = spb_lib.TemporalSchedule((1, 2, 3, 4))
+    slow = [0]
+    re = sched.rebalance(slow)
+    # the slow position no longer holds the deepest level
+    assert re.depths[re.order[0]] != max(re.depths)
+    assert sorted(re.order) == [0, 1, 2, 3]
+
+
+def test_estimator_variance_harmonic():
+    """Lemma 7.3: SPB estimator variance across blocks follows k/(i*B);
+    summing gives the ~log k inflation over full mini-batch SGD."""
+    rng = np.random.default_rng(0)
+    k, L, dim, trials = 4, 4, 64, 300
+    # true gradient per block is 0; workers see noise ~ N(0, 1)
+    var_blocks = np.zeros(L)
+    for _ in range(trials):
+        per_worker = jnp.asarray(rng.normal(size=(k, L, dim)))
+        est = np.asarray(spb_lib.spb_estimator(per_worker, k))
+        var_blocks += (est ** 2).mean(axis=1)
+    var_blocks /= trials
+    # block l is averaged by contributors(l) workers -> var = 1/c_l
+    depths = [math.ceil((j + 1) * L / k) for j in range(k)]
+    contrib = [sum(1 for d in depths if l >= L - d) for l in range(L)]
+    expect = np.array([1.0 / c for c in contrib])
+    np.testing.assert_allclose(var_blocks, expect, rtol=0.25)
+    # aggregate inflation vs full-k averaging ~ (1/L) sum k/c_l <= log k + 1
+    inflation = np.mean([k / c for c in contrib])
+    assert 1.0 < inflation <= k
+    assert inflation <= math.log(k) * k / math.log(2)
+
+
+def test_scale_params_tree_shapes(setup):
+    cfg, params, batch = setup
+    spb = SPBConfig(mode="temporal", k=4)
+    g = _grads(cfg, params, batch, None)
+    scaled = spb_lib.scale_params_tree(g, cfg, spb)
+    # structure preserved
+    assert jax.tree.structure(scaled) == jax.tree.structure(g)
+    # last layer unscaled (k/k), first layer scaled by k/contributors
+    contrib = spb_lib.layer_contributors(cfg, spb)
+    wq = np.asarray(g["groups"][0][0]["mixer"]["wq"])
+    wq_s = np.asarray(scaled["groups"][0][0]["mixer"]["wq"])
+    np.testing.assert_allclose(wq_s[-1], wq[-1] * (spb.k / contrib[-1]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(wq_s[0], wq[0] * (spb.k / contrib[0]),
+                               rtol=1e-6)

@@ -1,0 +1,78 @@
+"""End-to-end behaviour: training reduces loss (with and without SPB),
+SPB preserves quality (paper Table 3 at micro scale), serving produces
+tokens, sharding specs resolve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SPBConfig, TrainConfig
+from repro.configs import make_batch, reduced_config
+from repro.core import spb as spb_lib
+from repro.data.pipeline import Pipeline
+from repro.dist import steps as steps_lib
+
+
+def _train(arch, steps, spb_mode="off", k=4, seed=0, lr=3e-3, batch=8,
+           seq=64):
+    cfg = reduced_config(arch)
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=lr, num_steps=steps,
+                       warmup_steps=5)
+    spb = SPBConfig(mode=spb_mode, k=k)
+    fns = {d: jax.jit(f) for d, f in
+           steps_lib.build_spb_train_steps(cfg, tcfg, spb).items()}
+    sched = spb_lib.make_schedule(cfg, spb) if spb_mode == "temporal" else None
+    state = steps_lib.init_train_state(jax.random.key(seed), cfg, tcfg)
+    pipe = Pipeline(cfg, batch, seq, seed=seed)
+    losses = []
+    for step in range(steps):
+        d = sched.depth_at(step) if sched else None
+        fn = fns.get(d, fns[None])
+        state, metrics = fn(state, pipe.get_batch(step))
+        losses.append(float(metrics["xent"]))
+    return losses
+
+
+def test_training_reduces_loss():
+    losses = _train("yi-6b", 50)
+    assert losses[-1] < losses[0] - 0.15
+    assert np.isfinite(losses).all()
+
+
+def test_spb_training_reduces_loss_similarly():
+    """Paper Table 3 micro-analogue: SPB-trained loss tracks full-backprop
+    loss closely on the same stream."""
+    full = _train("yi-6b", 60, "off")
+    spb = _train("yi-6b", 60, "temporal", k=4)
+    # SPB learns (slower per iteration — the Thm 2.3 log(k) factor)
+    assert spb[-1] < spb[0] - 0.1
+    # final quality within a small margin of full backprop
+    assert abs(np.mean(spb[-5:]) - np.mean(full[-5:])) < 0.25
+
+
+def test_serve_generates():
+    from repro.launch.serve import serve
+    seq = serve(["--arch", "gemma3-4b", "--batch", "2",
+                 "--prompt-len", "32", "--gen", "4"])
+    assert seq.shape == (2, 4)
+    assert (seq >= 0).all()
+
+
+def test_sharding_specs_resolve_without_mesh():
+    """Model code runs identically with no ambient mesh (no-op shards)."""
+    from repro.dist.sharding import shard
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_param_spec_assignment():
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding as shd
+    from repro.models import lm
+    cfg = reduced_config("yi-6b")
+    shapes = lm.param_shapes(cfg)
+    specs = shd.params_pspec(shapes)
+    # without a mesh everything resolves to replicated
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert isinstance(s, P)
