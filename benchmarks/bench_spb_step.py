@@ -1,0 +1,86 @@
+"""Per-depth SPB step benchmark: wall-clock step time + compiled HLO
+flops/bytes/collectives for every snapped suffix depth of the temporal
+schedule, written to BENCH_spb_step.json so future perf PRs have a
+trajectory to compare against.
+
+  PYTHONPATH=src python benchmarks/bench_spb_step.py [--arch yi-6b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+
+from repro.analysis import hlo
+from repro.config import SPBConfig, TrainConfig
+from repro.configs import make_batch, reduced_config
+from repro.core import spb as spb_lib
+from repro.dist import steps as steps_lib
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_spb_step.json"
+
+
+def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
+          reps: int = 5) -> dict:
+    cfg = reduced_config(arch)
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=1e-3)
+    spb = SPBConfig(mode="temporal", k=k)
+    depths = sorted(set(spb_lib.snapped_depths(cfg, spb)))
+
+    state = steps_lib.init_train_state(jax.random.key(0), cfg, tcfg)
+    b = make_batch(cfg, batch, seq)
+    rows = []
+    for depth in [None] + depths:
+        step = jax.jit(steps_lib.make_train_step(cfg, tcfg, spb, depth=depth))
+        t0 = time.perf_counter()
+        lowered = step.lower(state, b)
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        cost = hlo.analyze(compiled.as_text())
+        jax.block_until_ready(compiled(state, b))         # warmup
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            new_state, metrics = compiled(state, b)
+            jax.block_until_ready(metrics["loss"])
+        step_ms = (time.perf_counter() - t0) / reps * 1e3
+        rows.append({
+            "depth": depth if depth is not None else "full",
+            "step_ms": round(step_ms, 2),
+            "compile_s": round(compile_s, 2),
+            "hlo_flops": cost.flops,
+            "hlo_bytes": cost.bytes,
+            "hlo_collective_bytes": cost.collective_bytes,
+        })
+    return {
+        "arch": arch, "batch": batch, "seq": seq, "k": k, "reps": reps,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "rows": rows,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=str(OUT))
+    args = ap.parse_args()
+    rec = bench(args.arch, args.batch, args.seq, args.k, args.reps)
+    Path(args.out).write_text(json.dumps(rec, indent=2) + "\n")
+    for r in rec["rows"]:
+        print(f"depth={r['depth']!s:>4}  step={r['step_ms']:8.2f}ms  "
+              f"flops={r['hlo_flops']:.3e}  bytes={r['hlo_bytes']:.3e}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Version bridge: this framework targets the post-0.5 JAX sharding API
+(``jax.sharding.set_mesh``, ``jax.sharding.AxisType``, ``jax.shard_map``,
+``lax.axis_size``, ``pltpu.CompilerParams``) while the pinned container
+ships jax 0.4.37.  ``install()`` fills exactly the missing names — every
+patch is guarded by a ``hasattr`` check, so on a newer JAX this module is
+a no-op and the upstream implementations win.
+
+Imported from ``repro/__init__.py`` so any ``import repro.<x>`` activates
+the bridge before framework code touches the new API surface.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+_installed = False
+_state = threading.local()
+
+
+def _current_mesh():
+    """The mesh most recently entered via the set_mesh shim (or None)."""
+    return getattr(_state, "mesh", None)
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+    _installed = True
+
+    import jax
+    import jax.sharding as jshd
+    from jax import lax
+
+    # --- jax.sharding.AxisType ------------------------------------------
+    if not hasattr(jshd, "AxisType"):
+        from jax._src import mesh as _mesh_lib
+
+        class AxisType:                                    # minimal enum
+            Auto = getattr(_mesh_lib.AxisTypes, "Auto", None)
+            Explicit = getattr(_mesh_lib.AxisTypes, "User", None)
+            Manual = getattr(_mesh_lib.AxisTypes, "Collective", None)
+
+        jshd.AxisType = AxisType
+
+    # --- jax.make_mesh(axis_types=...) ----------------------------------
+    try:
+        jax.make_mesh((1,), ("x",), axis_types=(jshd.AxisType.Auto,))
+        accepts_axis_types = True
+    except TypeError:
+        accepts_axis_types = False
+    except Exception:           # noqa: BLE001 — signature is fine
+        accepts_axis_types = True
+    if not accepts_axis_types:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _orig_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    # --- jax.sharding.set_mesh / get_abstract_mesh ----------------------
+    if not hasattr(jshd, "set_mesh"):
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            prev = getattr(_state, "mesh", None)
+            _state.mesh = mesh
+            try:
+                with mesh:      # legacy resource-env context (bare-P wsc)
+                    yield mesh
+            finally:
+                _state.mesh = prev
+
+        jshd.set_mesh = set_mesh
+
+    if not hasattr(jshd, "get_abstract_mesh"):
+
+        def get_abstract_mesh():
+            m = _current_mesh()
+            if m is not None:
+                return m
+            from jax._src import mesh as _mesh_lib
+            return _mesh_lib.thread_resources.env.physical_mesh
+
+        jshd.get_abstract_mesh = get_abstract_mesh
+
+    # --- jax.shard_map ---------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=True,
+                      check_rep=None, **kw):
+            if check_rep is None:
+                check_rep = check_vma
+
+            def bind(*args):
+                m = mesh if mesh is not None else _current_mesh()
+                if m is None:
+                    from jax._src import mesh as _mesh_lib
+                    m = _mesh_lib.thread_resources.env.physical_mesh
+                return _shard_map(f, m, in_specs=in_specs,
+                                  out_specs=out_specs,
+                                  check_rep=check_rep)(*args)
+
+            return bind
+
+        jax.shard_map = shard_map
+
+    # --- lax.axis_size ---------------------------------------------------
+    if not hasattr(lax, "axis_size"):
+        from jax._src import core as _core
+
+        def axis_size(name):
+            return _core.get_axis_env().axis_size(name)
+
+        lax.axis_size = axis_size
+
+    # --- pallas TPU compiler params --------------------------------------
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        if not hasattr(pltpu, "CompilerParams") and hasattr(
+                pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except Exception:           # noqa: BLE001 — pallas not available
+        pass

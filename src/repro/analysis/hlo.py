@@ -112,7 +112,11 @@ _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
 
 
 def _split_operands(rest: str) -> Tuple[List[str], str]:
-    """Split 'a, %b), attrs...' into operand list and trailing attrs."""
+    """Split 'a, %b), attrs...' into operand list and trailing attrs.
+
+    Operands may carry a type prefix ('f32[64,128]{1,0} %Arg_0.1' — XLA
+    emits either form depending on version); keep only the reference.
+    """
     depth = 1
     for i, ch in enumerate(rest):
         if ch in "({[":
@@ -121,8 +125,13 @@ def _split_operands(rest: str) -> Tuple[List[str], str]:
             depth -= 1
             if depth == 0:
                 inner, attrs = rest[:i], rest[i + 1:]
-                ops = [o.strip().lstrip("%") for o in _top_level_split(inner)]
-                return [o for o in ops if o], attrs
+                ops = []
+                for o in _top_level_split(inner):
+                    o = o.strip()
+                    if not o:
+                        continue
+                    ops.append(o.split()[-1].lstrip("%"))
+                return ops, attrs
     return [], rest
 
 
@@ -207,7 +216,8 @@ def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
         if c is None:
             continue
         for op in c.ops:
-            if op.opcode == "constant" and op.type_str.startswith(("s32", "u32", "s64", "u64")):
+            if op.opcode == "constant" and op.type_str.startswith(
+                    ("s32[]", "u32[]", "s64[]", "u64[]")):
                 m = re.match(r"(\-?\d+)", op.operands[0] if op.operands else "")
                 if m:
                     consts.append(int(m.group(1)))

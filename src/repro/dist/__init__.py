@@ -1,0 +1,4 @@
+"""Distributed training engine: logical-axis sharding (``sharding``),
+depth-specialized SPB train/decode steps (``steps``), and GPipe pipeline
+parallelism (``pipeline``)."""
+from repro.dist import pipeline, sharding, steps  # noqa: F401

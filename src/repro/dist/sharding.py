@@ -1,0 +1,214 @@
+"""Logical-axis sharding: one rule table maps logical tensor roles to mesh
+axes, and every annotation in the framework goes through it.
+
+Model code annotates activations with *roles* (``shard(x, "batch", "seq",
+"embed")``) and the launchers derive parameter / batch / KV-cache
+PartitionSpecs from the same table (``params_pspec`` & co).  The table can
+be overridden per launch (``rules({"batch": None, "kv_seq": ("data",
+"model")})`` for small-batch long-context decode) without touching model
+code.
+
+Everything degrades to a no-op without a mesh: ``shard`` returns its input
+unchanged when no mesh is ambient (single-process tests) or when the mesh
+axes are already bound by an enclosing ``shard_map`` (spatial SPB), and the
+``*_pspec`` helpers still return plain PartitionSpecs so the tests can
+inspect them mesh-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Role = Union[str, None]
+
+# logical role -> mesh axis (or tuple of axes).  'batch' expands over every
+# data-parallel axis of the ambient mesh ('pod' outer axis included).
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "kv_seq": None,
+    "heads": "model",
+    "vocab": "model",
+    "model": "model",
+    "expert": "model",
+    "stage": None,
+}
+
+_overrides: contextvars.ContextVar[Optional[Dict[str, Any]]] = \
+    contextvars.ContextVar("sharding_rules_overrides", default=None)
+
+
+@contextlib.contextmanager
+def rules(overrides: Optional[Dict[str, Any]] = None):
+    """Scoped rule overrides, e.g. ``rules({'batch': None})``."""
+    token = _overrides.set({**(_overrides.get() or {}), **(overrides or {})})
+    try:
+        yield
+    finally:
+        _overrides.reset(token)
+
+
+def _rule(role: str):
+    ov = _overrides.get()
+    if ov is not None and role in ov:
+        return ov[role]
+    return DEFAULT_RULES.get(role)
+
+
+def _ambient_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:       # noqa: BLE001
+        return None
+    if mesh is None or getattr(mesh, "empty", True):
+        return None
+    return mesh
+
+
+def _mapped_axis_names() -> set:
+    """Mesh axes currently bound by an enclosing shard_map/vmap."""
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        sizes = getattr(env, "axis_sizes", None)
+        if sizes:
+            return set(sizes)
+        return set(env.axis_names())
+    except Exception:       # noqa: BLE001
+        return set()
+
+
+def spec_for(roles: Sequence[Role], mesh=None) -> P:
+    """Resolve logical roles to a PartitionSpec.
+
+    Axes absent from the ambient mesh are dropped; an axis already consumed
+    by an earlier dim loses to the first user (keeps specs valid when an
+    override points two roles at the same axis).
+    """
+    if mesh is None:
+        mesh = _ambient_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    used: set = set()
+    out = []
+    for role in roles:
+        if role is None:
+            out.append(None)
+            continue
+        axes = _rule(role)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        keep = tuple(a for a in axes
+                     if (mesh_axes is None or a in mesh_axes)
+                     and a not in used)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *roles: Role) -> jax.Array:
+    """Constrain ``x``'s sharding by logical roles; no-op without a mesh."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    if _mapped_axis_names() & set(mesh.axis_names):
+        return x            # inside shard_map: axes are manual
+    spec = spec_for(roles, mesh=mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter / batch / cache PartitionSpec derivation
+# ---------------------------------------------------------------------------
+
+# weights whose LAST dim is tensor-parallel ("column" parallel)
+_COL_KEYS = {"wq", "wk", "wv", "wg", "wu", "wdkv", "wkr", "wuk", "wuv",
+             "wdq", "wuq", "in_proj", "in_x", "in_z", "unembed"}
+# weights whose SECOND-TO-LAST dim is tensor-parallel ("row" parallel)
+_ROW_KEYS = {"wo", "wd", "out_proj"}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _param_spec(path, leaf, mesh) -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    nd = len(leaf.shape)
+    in_expert = name in ("wg", "wu", "wd") and "ffn" in keys and nd >= 4
+
+    def resolved(roles):
+        return spec_for(roles, mesh=mesh)
+
+    if name == "tok":
+        return resolved(("vocab",) + (None,) * (nd - 1))
+    if in_expert:
+        # stacked (count, E, D, F): experts over the EP axis
+        return resolved((None,) * (nd - 3) + ("expert", None, None))
+    if name in _COL_KEYS and nd >= 2:
+        return resolved((None,) * (nd - 1) + ("model",))
+    if name in _ROW_KEYS and nd >= 2:
+        return resolved((None,) * (nd - 2) + ("model", None))
+    return P()
+
+
+def params_pspec(params_shapes: Any, mesh=None) -> Any:
+    """PartitionSpec pytree for LM params (works on shapes or arrays)."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(path, leaf, mesh), params_shapes)
+
+
+def batch_pspec(batch: Any, mesh=None) -> Any:
+    """Batch inputs: leading dim over the DP axes, rest replicated."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    return jax.tree_util.tree_map(
+        lambda leaf: spec_for(("batch",) + (None,) * (len(leaf.shape) - 1),
+                              mesh=mesh),
+        batch)
+
+
+def _cache_spec(path, leaf, mesh) -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    nd = len(leaf.shape)
+
+    def resolved(roles):
+        return spec_for(roles, mesh=mesh)
+
+    if name in ("k", "v") and nd >= 5:
+        # stacked (count, B, W, Hkv, Dh)
+        return resolved((None,) * (nd - 4) + ("batch", "kv_seq", "heads", None))
+    if name in ("ckv", "kr") and nd >= 4:
+        # stacked (count, B, S, r)
+        return resolved((None,) * (nd - 3) + ("batch", "kv_seq", None))
+    if nd >= 2 and name not in ("pos",):
+        # generic stacked per-layer state: (count, B, ...)
+        return resolved((None, "batch") + (None,) * (nd - 2))
+    return P()
+
+
+def cache_pspec(cache_shapes: Any, mesh=None) -> Any:
+    """PartitionSpec pytree for a KV/state cache."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_spec(path, leaf, mesh), cache_shapes)

@@ -1,0 +1,363 @@
+"""Depth-specialized SPB training steps — the engine behind the paper's
+Table 1 savings.
+
+The key mechanism: for temporal SPB, :func:`build_spb_train_steps` emits
+one jitted step **per snapped suffix depth**, with the depth baked in as a
+static argument of ``lm.forward_train``.  The frozen prefix runs under
+``stop_gradient`` so XLA's dead-code elimination provably deletes the
+prefix backward — compute, activation memory, and gradient collectives all
+shrink in the compiled HLO (asserted by the elision tests via
+``analysis/hlo.py``), rather than merely being scheduled around.
+
+Spatial SPB (the paper's parameter-server form) runs every depth
+simultaneously across DP workers inside ``shard_map``; the weighted
+aggregation lives in ``core/spb.py`` and the reduced-wire-bytes prefix
+reduce uses ``subgroup_allreduce`` when ``SPBConfig.subgroup_reduce`` is
+set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, SPBConfig, TrainConfig
+from repro.core import compress
+from repro.core import spb as spb_lib
+from repro.dist import sharding as shd
+from repro.models import lm
+from repro.optim import optimizers
+
+State = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> State:
+    params = lm.init_lm(key, cfg)
+    return {
+        "params": params,
+        "opt": optimizers.init_opt_state(params, tcfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_shapes(cfg: ModelConfig, tcfg: TrainConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), cfg, tcfg))
+
+
+# ---------------------------------------------------------------------------
+# Single train step (static SPB suffix depth)
+# ---------------------------------------------------------------------------
+
+def _microbatches(batch: Dict[str, jax.Array], m: int):
+    """Split every leaf along the batch dim into ``m`` equal chunks."""
+    size = jax.tree.leaves(batch)[0].shape[0]
+    if size % m:
+        raise ValueError(f"batch size {size} not divisible by {m} microbatches")
+    c = size // m
+    return [jax.tree.map(lambda t, i=i: t[i * c:(i + 1) * c], batch)
+            for i in range(m)]
+
+
+def _grad_fn(cfg: ModelConfig, depth: Optional[int]):
+    def loss(params, batch):
+        return lm.loss_fn(params, batch, cfg, bwd_layers=depth)
+    return jax.value_and_grad(loss, has_aux=True)
+
+
+def _finish_step(state: State, grads, metrics, tcfg: TrainConfig,
+                 cfg: ModelConfig, spb_cfg: Optional[SPBConfig]
+                 ) -> Tuple[State, Dict[str, jax.Array]]:
+    if tcfg.compression != "none":
+        key = jax.random.fold_in(jax.random.key(tcfg.seed), state["step"])
+        grads = compress.compress_tree(grads, tcfg.compression,
+                                       tcfg.compression_ratio, key)
+    params, opt, opt_metrics = optimizers.apply_updates(
+        state["params"], grads, state["opt"], state["step"], tcfg,
+        cfg=cfg, spb_cfg=spb_cfg)
+    new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+    return new_state, {**metrics, **opt_metrics}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    spb_cfg: Optional[SPBConfig] = None, *,
+                    depth: Optional[int] = None) -> Callable:
+    """Build a (state, batch) -> (state, metrics) step.
+
+    ``depth`` is the static SPB suffix depth (None = full backprop).  The
+    returned function is pure — wrap it in ``jax.jit`` directly or via
+    :func:`shard_train_step`.
+    """
+    grad_fn = _grad_fn(cfg, depth)
+
+    def step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
+        if tcfg.microbatches > 1:
+            chunks = _microbatches(batch, tcfg.microbatches)
+            grads = None
+            metrics = None
+            for chunk in chunks:
+                (_, m), g = grad_fn(state["params"], chunk)
+                grads = g if grads is None else jax.tree.map(
+                    jnp.add, grads, g)
+                metrics = m if metrics is None else jax.tree.map(
+                    jnp.add, metrics, m)
+            inv = 1.0 / tcfg.microbatches
+            grads = jax.tree.map(lambda t: t * inv, grads)
+            metrics = jax.tree.map(lambda t: t * inv, metrics)
+        else:
+            (_, metrics), grads = grad_fn(state["params"], batch)
+        return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Temporal SPB over microbatches: one step covers a whole depth cycle
+# ---------------------------------------------------------------------------
+
+def make_temporal_mb_step(cfg: ModelConfig, tcfg: TrainConfig,
+                          spb_cfg: SPBConfig) -> Callable:
+    """Grad-accumulation step where microbatch j backprops suffix depth
+    ``depths[order[j]]`` — one compiled step amortizes the full k-cycle, so
+    every depth's backward is specialized (and elided) at compile time."""
+    sched = spb_lib.make_schedule(cfg, spb_cfg)
+    cycle = [sched.depths[i] for i in sched.order]
+    grad_fns = {d: _grad_fn(cfg, d) for d in set(cycle)}
+
+    def step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
+        chunks = _microbatches(batch, len(cycle))
+        grads = None
+        metrics = None
+        for chunk, d in zip(chunks, cycle):
+            (_, m), g = grad_fns[d](state["params"], chunk)
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+            metrics = m if metrics is None else jax.tree.map(jnp.add, metrics, m)
+        inv = 1.0 / len(cycle)
+        grads = jax.tree.map(lambda t: t * inv, grads)
+        metrics = jax.tree.map(lambda t: t * inv, metrics)
+        return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Spatial SPB (paper-faithful): per-worker depth inside shard_map
+# ---------------------------------------------------------------------------
+
+def make_spatial_step(cfg: ModelConfig, tcfg: TrainConfig,
+                      spb_cfg: SPBConfig, *, axis_name: str = "data"
+                      ) -> Callable:
+    """Each DP worker backprops its own static suffix depth (lax.switch on
+    ``axis_index % k``); gradients aggregate with the paper's weighted
+    average.  ``spb_cfg.subgroup_reduce`` swaps the full-axis psum for
+    sub-group all-reduces so prefix blocks move fewer wire bytes."""
+    depths = spb_lib.snapped_depths(cfg, spb_cfg)
+
+    def lag(depth):
+        def f(p, b):
+            (l, m), g = jax.value_and_grad(
+                lambda pp: lm.loss_fn(pp, b, cfg, bwd_layers=depth),
+                has_aux=True)(p)
+            return (l, m["xent"]), g
+        return f
+
+    branches = [lag(d) for d in depths]
+
+    def body(params, batch):
+        (loss, xent), grads = spb_lib.spatial_grads(
+            branches, params, batch, axis_name=axis_name, spb=spb_cfg,
+            cfg=cfg)
+        if spb_cfg.subgroup_reduce:
+            grads = _subgroup_rereduce(grads, cfg, spb_cfg, axis_name)
+        return loss, xent, grads
+
+    # spatial_grads already applies the weighted average — the optimizer
+    # must not rescale again.
+    no_rescale = dataclasses.replace(spb_cfg, lr_rescale=False)
+
+    def step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
+        mesh = jax.sharding.get_abstract_mesh()
+        loss, xent, grads = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis_name)), out_specs=(P(), P(), P()),
+            check_vma=False)(state["params"], batch)
+        metrics = {"loss": loss, "xent": xent,
+                   "moe_aux": jnp.zeros((), jnp.float32)}
+        return _finish_step(state, grads, metrics, tcfg, cfg, no_rescale)
+
+    return step
+
+
+def _subgroup_rereduce(grads, cfg: ModelConfig, spb_cfg: SPBConfig,
+                       axis_name: str):
+    """Demonstration wiring of ``subgroup_allreduce``: re-reduce each layer
+    block over only its contributing workers (smaller replica groups =
+    fewer wire bytes for prefix blocks in the compiled HLO).
+
+    Values are already correct and replicated after ``spatial_grads``'s
+    psum, so the re-reduce must be value-preserving *on every worker*:
+    contributors (the last ``c`` along the axis) feed ``t/c`` whose
+    subgroup sum restores ``t``; non-contributors sit in singleton
+    replica groups where the reduce is the identity, so they must feed
+    ``t`` undivided — dividing everywhere would leave ``t/c`` on worker 0
+    and the replicated out-spec would publish that wrong value."""
+    from jax import lax
+    contrib = spb_lib.layer_contributors(cfg, spb_cfg)
+    n = lax.axis_size(axis_name)
+    k = spb_cfg.k
+    groups_per_layer = max(1, n // k)
+    idx = lax.axis_index(axis_name)
+    from repro.config import layer_groups
+    out = dict(grads)
+    new_groups = []
+    off = 0
+    for (unit, count), gp in zip(layer_groups(cfg), grads["groups"]):
+        p = len(unit)
+        out_g = []
+        for u, up in enumerate(gp):
+            def re_one(t, u=u):
+                parts = []
+                for r in range(count):
+                    c = contrib[off + r * p + u] * groups_per_layer
+                    c = min(max(c, 1), n)
+                    inp = jnp.where(idx >= n - c, t[r] / c, t[r])
+                    part = spb_lib.subgroup_allreduce(
+                        inp, axis_name, contributors=c, axis_size=n)
+                    parts.append(part)
+                return jnp.stack(parts)
+            out_g.append(jax.tree.map(re_one, up))
+        new_groups.append(out_g)
+        off += p * count
+    out["groups"] = new_groups
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The depth-specialized step table
+# ---------------------------------------------------------------------------
+
+def build_spb_train_steps(cfg: ModelConfig, tcfg: TrainConfig,
+                          spb_cfg: SPBConfig) -> Dict[Any, Callable]:
+    """Step functions keyed by static suffix depth.
+
+    Always contains ``None`` (full backprop).  ``temporal`` adds one entry
+    per snapped depth of the k-cycle; ``temporal-mb`` adds ``"mb"`` (the
+    whole cycle as accumulated microbatches); ``spatial`` replaces the full
+    step with the shard_map worker-depth step.
+    """
+    steps: Dict[Any, Callable] = {}
+    if spb_cfg.mode == "spatial":
+        steps[None] = make_spatial_step(cfg, tcfg, spb_cfg)
+        return steps
+    steps[None] = make_train_step(cfg, tcfg, spb_cfg, depth=None)
+    if spb_cfg.mode == "temporal":
+        for d in sorted(set(spb_lib.snapped_depths(cfg, spb_cfg))):
+            steps[d] = make_train_step(cfg, tcfg, spb_cfg, depth=d)
+    elif spb_cfg.mode == "temporal-mb":
+        steps["mb"] = make_temporal_mb_step(cfg, tcfg, spb_cfg)
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# Sharding wrappers (jit + mesh placement)
+# ---------------------------------------------------------------------------
+
+def _zero1_spec(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard optimizer-state leaves over the DP axes
+    on the first divisible, not-yet-sharded dim."""
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not dp:
+        return spec
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if used & set(dp):
+        return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp_size == 0 and dim >= dp_size:
+            entries[i] = tuple(dp) if len(dp) > 1 else dp[0]
+            return P(*entries)
+    return spec
+
+
+def state_pspec(state_shapes: State, mesh=None, *, zero1: bool = False):
+    """PartitionSpecs for a full train state."""
+    pspec = shd.params_pspec(state_shapes["params"], mesh=mesh)
+    opt = {}
+    for key, sub in state_shapes["opt"].items():
+        sub_spec = shd.params_pspec(sub, mesh=mesh)
+        if zero1 and mesh is not None:
+            sub_spec = jax.tree.map(
+                lambda s, l: _zero1_spec(s, l.shape, mesh), sub_spec, sub,
+                is_leaf=lambda x: isinstance(x, P))
+        opt[key] = sub_spec
+    return {"params": pspec, "opt": opt, "step": P()}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_train_step(fn: Callable, mesh, cfg: ModelConfig,
+                     tcfg: TrainConfig, *, donate: bool = True,
+                     zero1: bool = True):
+    """Jit ``fn`` with the production state/batch placement.
+
+    Returns (jitted, state_shapes, state_shardings).  Input layouts are
+    pinned with in-function sharding constraints so the same wrapper works
+    for any batch pytree (GSPMD propagates the rest).
+    """
+    shapes = train_state_shapes(cfg, tcfg)
+    specs = state_pspec(shapes, mesh=mesh, zero1=zero1)
+    state_sh = _named(mesh, specs)
+
+    def wrapped(state, batch):
+        state = jax.lax.with_sharding_constraint(state, state_sh)
+        batch = jax.lax.with_sharding_constraint(
+            batch, _named(mesh, shd.batch_pspec(batch, mesh=mesh)))
+        new_state, metrics = fn(state, batch)
+        new_state = jax.lax.with_sharding_constraint(new_state, state_sh)
+        return new_state, metrics
+
+    jitted = jax.jit(wrapped, donate_argnums=(0,) if donate else ())
+    return jitted, shapes, state_sh
+
+
+def shard_decode_step(mesh, cfg: ModelConfig, global_batch: int,
+                      max_len: int, *, enc_len: int = 0,
+                      rules_overrides: Optional[Dict[str, Any]] = None):
+    """AOT-shardable single-token decode step.
+
+    Returns (jitted, params_shapes, cache_shapes, shardings); the cache is
+    donated so steady-state decode runs in place.
+    """
+    with shd.rules(rules_overrides):
+        params_shapes = lm.param_shapes(cfg)
+        cache_shapes = lm.cache_shapes(cfg, global_batch, max_len,
+                                       enc_len=enc_len)
+        pspec = shd.params_pspec(params_shapes, mesh=mesh)
+        cspec = shd.cache_pspec(cache_shapes, mesh=mesh)
+        logits_spec = shd.spec_for(("batch", None, "vocab"), mesh=mesh)
+    p_sh, c_sh = _named(mesh, pspec), _named(mesh, cspec)
+    tok_sh = NamedSharding(mesh, shd.spec_for(("batch", None), mesh=mesh))
+
+    fn = jax.jit(
+        lambda p, c, t: lm.decode_step(p, c, t, cfg),
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(NamedSharding(mesh, logits_spec), c_sh),
+        donate_argnums=(1,))
+    return fn, params_shapes, cache_shapes, {
+        "params": p_sh, "cache": c_sh, "tokens": tok_sh}

@@ -40,8 +40,11 @@ class JobSpec:
         return len(self.workers)
 
 
-@dataclass
+@dataclass(eq=False)
 class Task:
+    """eq=False: tasks are identity-keyed.  Two workers of one job can
+    have identical field values, and value-equality removal from the ready
+    queue would alias them (and cost a linear scan per placement)."""
     job_id: int
     worker_id: int
     iteration: int
@@ -159,10 +162,13 @@ def simulate(jobs: List[JobSpec], scheduler: Scheduler, *,
                         spawn_iteration(job, nxt, now)
         # ask the policy to place whatever is ready
         accepted_any = False
+        accepted_ids: set = set()
         if ready:
             placed = scheduler.place(ready, state, now, jobs_by_id, gamma)
             for a in placed:
                 t = a.task
+                if id(t) in accepted_ids:
+                    continue            # policy returned the task twice
                 key = (t.job_id, t.worker_id)
                 prev = state.last_machine.get(key)
                 mig = prev is not None and prev != a.machine
@@ -172,7 +178,7 @@ def simulate(jobs: List[JobSpec], scheduler: Scheduler, *,
                     start += gamma * jobs_by_id[t.job_id].model_size_gb
                 if start > now + horizon:
                     continue            # outside the planning interval
-                ready.remove(t)
+                accepted_ids.add(id(t))
                 if mig:
                     migrations[t.job_id] += 1
                 end = start + t.duration
@@ -186,6 +192,10 @@ def simulate(jobs: List[JobSpec], scheduler: Scheduler, *,
                                         (t, a.machine)))
                 seq += 1
                 accepted_any = True
+        if accepted_ids:
+            # one identity-keyed sweep instead of a value-equality linear
+            # scan per placed task (O(n) per round, not O(n^2))
+            ready[:] = [t for t in ready if id(t) not in accepted_ids]
         if accepted_any:
             fruitless = 0
         if ready and not accepted_any and not events:

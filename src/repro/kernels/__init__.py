@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+``flash_attention`` (differentiable — custom VJP with FlashAttention-2
+backward kernels), ``ssd`` (Mamba-2 chunked scan) and ``rglru`` (Griffin
+linear recurrence); pure-jnp oracles live in ``ref.py`` and the public
+jit'd entry points in ``ops.py``.
+"""
+from repro.kernels.ops import flash_attention, rglru, ssd  # noqa: F401

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention_bwd import (bwd_kernel_layout,
+                                               fwd_res_kernel_layout)
 from repro.kernels.rglru import rglru_scan
 from repro.kernels.ssd import ssd_scan
 
@@ -23,16 +25,51 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, window, q_block, kv_block, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               q_block=q_block, kv_block=kv_block,
+                               interpret=interpret)
+
+
+def _t(x):
+    return x.transpose(0, 2, 1, 3)      # (B,S,H,D) <-> (B,H,S,D)
+
+
+def _flash_attention_fwd(q, k, v, causal, window, q_block, kv_block,
+                         interpret):
+    # residuals are kept in the kernel-native (B,H,S,D) layout so the
+    # backward launches straight into its kernels without re-transposing
+    qt, kt, vt = _t(q), _t(k), _t(v)
+    ot, lse = fwd_res_kernel_layout(
+        qt, kt, vt, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=interpret)
+    return _t(ot), (qt, kt, vt, ot, lse)
+
+
+def _flash_attention_bwd(causal, window, q_block, kv_block, interpret,
+                         res, g):
+    qt, kt, vt, ot, lse = res
+    dq, dk, dv = bwd_kernel_layout(
+        qt, kt, vt, ot, lse, _t(g), causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, interpret=interpret)
+    return _t(dq), _t(dk), _t(dv)
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
                                              "kv_block", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     q_block: int = 128, kv_block: int = 128,
                     interpret: bool | None = None):
+    """Differentiable flash attention (custom VJP: FlashAttention-2
+    backward kernels — see ``kernels/flash_attention_bwd.py``)."""
     if interpret is None:
         interpret = not _on_tpu()
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               q_block=q_block, kv_block=kv_block,
-                               interpret=interpret)
+    return _flash_attention(q, k, v, causal, window, q_block, kv_block,
+                            interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -115,7 +115,13 @@ def _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history):
             batch = pipe.get_batch(step)
             if spb_cfg.mode == "temporal":
                 d = sched.depth_at(step)
-                fn = jitted.get(d, jitted[None])
+                if d not in jitted:
+                    # a silent fallback to the full-depth step would erase
+                    # the SPB savings without any visible failure
+                    raise KeyError(
+                        f"no jitted SPB step for snapped depth {d}; "
+                        f"available depths: {sorted(k for k in jitted if isinstance(k, int))}")
+                fn = jitted[d]
             elif spb_cfg.mode == "temporal-mb":
                 fn = jitted["mb"]
             else:

@@ -102,7 +102,7 @@ def test_collective_bytes_on_8_devices():
     r = subprocess.run([sys.executable, "-c", _COLLECTIVE_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "COLL_OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
 
 

@@ -45,5 +45,5 @@ def test_pipeline_matches_sequential_on_4_devices():
     r = subprocess.run([sys.executable, "-c", _PP_SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "PP_OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"

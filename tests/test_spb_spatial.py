@@ -78,6 +78,27 @@ _SPATIAL_SCRIPT = textwrap.dedent("""
     v = np.asarray(vals).ravel()
     assert v[-1] == 4 + 5 + 6 + 7, v     # contributors' true sum
     print("SUBGROUP_OK")
+
+    # ---- integrated subgroup re-reduce: value-preserving on EVERY worker
+    # (the replicated out-spec publishes worker 0's value, so a reduce
+    # that is only correct on contributors would corrupt prefix grads) ----
+    from repro.dist.steps import _subgroup_rereduce
+    spb_sub = SPBConfig(mode="spatial", k=4, subgroup_reduce=True)
+
+    def body_sub(p, b):
+        loss, g = spb_lib.spatial_grads(branches, p, b, axis_name="data",
+                                        spb=spb_sub, cfg=cfg)
+        return loss, _subgroup_rereduce(g, cfg, spb_sub, "data")
+
+    with jax.sharding.set_mesh(mesh):
+        _, grads_sub = jax.jit(jax.shard_map(
+            body_sub, in_specs=(P(), P("data")), out_specs=(P(), P()),
+            check_vma=False))(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(grads_sub["groups"][0][0]["mixer"]["wq"], np.float32),
+        np.asarray(grads["groups"][0][0]["mixer"]["wq"], np.float32),
+        rtol=1e-5, atol=1e-7)
+    print("SUBGROUP_REREDUCE_OK")
 """)
 
 
@@ -86,6 +107,7 @@ def test_spatial_spb_on_8_workers():
     r = subprocess.run([sys.executable, "-c", _SPATIAL_SCRIPT],
                        capture_output=True, text=True, timeout=900,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
-    assert "SPATIAL_OK" in r.stdout and "SUBGROUP_OK" in r.stdout, (
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert ("SPATIAL_OK" in r.stdout and "SUBGROUP_OK" in r.stdout
+            and "SUBGROUP_REREDUCE_OK" in r.stdout), (
         f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}")
