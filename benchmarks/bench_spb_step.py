@@ -3,6 +3,10 @@ flops/bytes/collectives for every snapped suffix depth of the temporal
 schedule, written to BENCH_spb_step.json so future perf PRs have a
 trajectory to compare against.
 
+The steps are the engine's own compiled table (donated in_shardings
+signatures — ``alias_bytes`` in each row proves params/opt-state update
+in place), so the benchmark measures exactly what the trainer runs.
+
   PYTHONPATH=src python benchmarks/bench_spb_step.py [--arch yi-6b]
 """
 from __future__ import annotations
@@ -18,8 +22,7 @@ import jax
 from repro.analysis import hlo
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import make_batch, reduced_config
-from repro.core import spb as spb_lib
-from repro.dist import steps as steps_lib
+from repro.engine import SPBEngine
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_spb_step.json"
 
@@ -29,31 +32,35 @@ def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
     cfg = reduced_config(arch)
     tcfg = TrainConfig(optimizer="adamw", learning_rate=1e-3)
     spb = SPBConfig(mode="temporal", k=k)
-    depths = sorted(set(spb_lib.snapped_depths(cfg, spb)))
 
-    state = steps_lib.init_train_state(jax.random.key(0), cfg, tcfg)
+    engine = SPBEngine(cfg, tcfg, spb)
     b = make_batch(cfg, batch, seq)
     rows = []
-    for depth in [None] + depths:
-        step = jax.jit(steps_lib.make_train_step(cfg, tcfg, spb, depth=depth))
+    for key in engine.depth_keys():
         t0 = time.perf_counter()
-        lowered = step.lower(state, b)
-        compiled = lowered.compile()
+        compiled = engine.compile_table(engine.batch_specs_like(b),
+                                        depths=[key])[key]
         compile_s = time.perf_counter() - t0
         cost = hlo.analyze(compiled.as_text())
-        jax.block_until_ready(compiled(state, b))         # warmup
+        ma = compiled.memory_analysis()
+        # donation consumes the input state, so each timed call chains the
+        # returned state (layouts match by construction: out_shardings ==
+        # in_shardings)
+        engine.init_state(jax.random.key(0))
+        jax.block_until_ready(engine.train_step(b, 0, depth=key))  # warmup
         t0 = time.perf_counter()
-        for _ in range(reps):
-            new_state, metrics = compiled(state, b)
+        for r in range(reps):
+            metrics = engine.train_step(b, r + 1, depth=key)
             jax.block_until_ready(metrics["loss"])
         step_ms = (time.perf_counter() - t0) / reps * 1e3
         rows.append({
-            "depth": depth if depth is not None else "full",
+            "depth": key if key is not None else "full",
             "step_ms": round(step_ms, 2),
             "compile_s": round(compile_s, 2),
             "hlo_flops": cost.flops,
             "hlo_bytes": cost.bytes,
             "hlo_collective_bytes": cost.collective_bytes,
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
         })
     return {
         "arch": arch, "batch": batch, "seq": seq, "k": k, "reps": reps,
@@ -61,6 +68,7 @@ def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
         "device_count": jax.device_count(),
         "platform": platform.platform(),
         "jax_version": jax.__version__,
+        "donate": True,
         "rows": rows,
     }
 
@@ -78,7 +86,8 @@ def main():
     Path(args.out).write_text(json.dumps(rec, indent=2) + "\n")
     for r in rec["rows"]:
         print(f"depth={r['depth']!s:>4}  step={r['step_ms']:8.2f}ms  "
-              f"flops={r['hlo_flops']:.3e}  bytes={r['hlo_bytes']:.3e}")
+              f"flops={r['hlo_flops']:.3e}  bytes={r['hlo_bytes']:.3e}  "
+              f"alias={r['alias_bytes']:.2e}")
     print(f"wrote {args.out}")
 
 

@@ -10,7 +10,7 @@ convergence per iteration (the log k factor of Thm 2.3).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +18,8 @@ import numpy as np
 
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import reduced_config
-from repro.core import spb as spb_lib
 from repro.data.pipeline import Pipeline, classification_task
-from repro.dist import steps as steps_lib
+from repro.engine import SPBEngine
 
 
 def train_lm(arch: str, steps: int, spb_mode: str, k: int = 4,
@@ -28,20 +27,11 @@ def train_lm(arch: str, steps: int, spb_mode: str, k: int = 4,
     cfg = reduced_config(arch)
     tcfg = TrainConfig(optimizer="adamw", learning_rate=lr,
                        num_steps=steps, warmup_steps=5)
-    spb = SPBConfig(mode=spb_mode, k=k)
-    fns = {d: jax.jit(f) for d, f in
-           steps_lib.build_spb_train_steps(cfg, tcfg, spb).items()}
-    sched = (spb_lib.make_schedule(cfg, spb)
-             if spb_mode == "temporal" else None)
-    state = steps_lib.init_train_state(jax.random.key(seed), cfg, tcfg)
+    engine = SPBEngine(cfg, tcfg, SPBConfig(mode=spb_mode, k=k))
+    engine.init_state(jax.random.key(seed))
     pipe = Pipeline(cfg, 8, 64, seed=seed)
-    losses = []
-    for step in range(steps):
-        d = sched.depth_at(step) if sched else None
-        fn = fns.get(d, fns[None])
-        state, metrics = fn(state, pipe.get_batch(step))
-        losses.append(float(metrics["xent"]))
-    return losses
+    return [float(engine.train_step(pipe.get_batch(step), step)["xent"])
+            for step in range(steps)]
 
 
 # --------------------------------------------------------------- MLP / SPB

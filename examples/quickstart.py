@@ -10,10 +10,8 @@ import jax
 from repro.analysis import hlo
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import make_batch, reduced_config
-from repro.core import spb as spb_lib
 from repro.data.pipeline import Pipeline
-from repro.dist import steps as steps_lib
-from repro.models import lm
+from repro.engine import SPBEngine
 
 
 def main():
@@ -22,31 +20,28 @@ def main():
                        warmup_steps=5)
     spb = SPBConfig(mode="temporal", k=4)
 
-    # --- what SPB saves, from the compiled HLO -------------------------
-    params = lm.init_lm(jax.random.key(0), cfg)
+    # one session object owns mesh + state + the per-depth step table
+    engine = SPBEngine(cfg, tcfg, spb)
+    engine.init_state(jax.random.key(0))
     batch = make_batch(cfg, 8, 64)
+
+    # --- what SPB saves, from the engine's own compiled table ----------
+    table = engine.compile_table(engine.batch_specs_like(batch))
     print("compiled cost by SPB suffix depth (4-layer model):")
-    for depth in (None, 2, 1):
-        c = jax.jit(lambda p, b, d=depth: jax.grad(
-            lambda pp: lm.loss_fn(pp, b, cfg, bwd_layers=d)[0])(p)
-        ).lower(params, batch).compile()
-        cs = hlo.analyze(c.as_text())
-        label = depth if depth is not None else cfg.num_layers
-        print(f"  backprop {label}/{cfg.num_layers} layers: "
+    for depth in sorted((k for k in table if isinstance(k, int)),
+                        reverse=True):
+        cs = hlo.analyze(table[depth].as_text())
+        print(f"  backprop {depth}/{cfg.num_layers} layers: "
               f"flops={cs.flops:.3e} hbm_bytes={cs.bytes:.3e}")
 
     # --- train with the temporal SPB schedule --------------------------
-    fns = {d: jax.jit(f) for d, f in
-           steps_lib.build_spb_train_steps(cfg, tcfg, spb).items()}
-    sched = spb_lib.make_schedule(cfg, spb)
+    sched = engine.policy.schedule
     print(f"\nSPB depth cycle: {sched.depths} (order {sched.order})")
-    state = steps_lib.init_train_state(jax.random.key(0), cfg, tcfg)
     pipe = Pipeline(cfg, 8, 64, seed=0)
     for step in range(tcfg.num_steps):
-        d = sched.depth_at(step)
-        state, metrics = fns.get(d, fns[None])(state, pipe.get_batch(step))
+        metrics = engine.train_step(pipe.get_batch(step), step)
         if step % 5 == 0 or step == tcfg.num_steps - 1:
-            print(f"  step {step:3d} depth {d} "
+            print(f"  step {step:3d} depth {engine.last_depth} "
                   f"xent {float(metrics['xent']):.4f}")
     print("done — see examples/train_spb_cluster.py for the full driver.")
 

@@ -1,40 +1,118 @@
 """End-to-end cluster-style training driver (deliverable b).
 
-Trains a ~100M-parameter llama-style model for a few hundred steps on the
-host mesh with the production feature set on: SPB temporal schedule,
-checkpointing + auto-restart, deterministic shard-aware data pipeline,
-mixed-precision optimizer.  On a real TPU fleet the same driver runs with
-``make_production_mesh()`` and the full configs.
+Trains a ~100M-parameter llama-style model on the host mesh by driving
+``repro.engine.SPBEngine`` directly — the same session API the trainer,
+dry-run and benchmarks use — with the production feature set on: SPB
+temporal schedule behind a *scheduler hook*, checkpointing + resume,
+deterministic shard-aware data pipeline, mixed-precision optimizer.
+
+The depth policy is the JigSaw bridge: a JobSpec-level controller watches
+per-iteration wall-clock and, when the job runs over its time budget
+(e.g. a co-scheduled tenant steals cycles), requests a shallower backprop
+depth for the next iterations via ``SchedulerHookPolicy`` — the paper's
+scheduler-controlled cost knob acting on real execution.  On a real TPU
+fleet the same driver runs with ``make_production_mesh()``.
 
   PYTHONPATH=src python examples/train_spb_cluster.py [--steps 300]
 """
 import argparse
+import time
 
-from repro.launch.train import train
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import SPBConfig, TrainConfig
+from repro.data.pipeline import Pipeline
+from repro.engine import CyclePolicy, SPBEngine, SchedulerHookPolicy
+
+
+class TimeBudgetController:
+    """Stand-in for a JobSpec-level cluster scheduler: keeps the job under
+    ``budget_s`` per iteration by shrinking the next iteration's backprop
+    fraction; hands control back to the cycle schedule when healthy."""
+
+    def __init__(self, hook: SchedulerHookPolicy, budget_s: float):
+        self.hook = hook
+        self.budget_s = budget_s
+        self.ema = None
+
+    def after_step(self, step_time_s: float) -> None:
+        self.ema = (step_time_s if self.ema is None
+                    else 0.7 * self.ema + 0.3 * step_time_s)
+        if self.ema > self.budget_s:
+            self.hook.request_fraction(0.5)     # halve the backprop bill
+        else:
+            self.hook.clear()                   # back to the k-cycle
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt", default="/tmp/repro_spb_100m")
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="per-iteration time budget for the scheduler "
+                         "hook (0 = derive from warmup steps)")
     args = ap.parse_args()
 
     # ~100M params: 12 layers x d_model 640 x vocab 8192 llama-style.
     # We reuse yi-6b's family (GQA + SwiGLU) via config overrides.
     import repro.configs.yi_6b as yi
-    cfg_100m = yi.CONFIG.scaled(
+    cfg = yi.CONFIG.scaled(
         name="llama-100m", d_model=640, num_layers=12, vocab_size=8192,
         num_heads=10, num_kv_heads=2, head_dim=64, d_ff=1792,
         dtype="float32", attn_q_block=128, attn_kv_block=128)
-    # register it so --arch finds it
-    yi.REDUCED = cfg_100m
 
-    train(["--arch", "yi-6b", "--reduced",
-           "--steps", str(args.steps),
-           "--batch", "16", "--seq", "256",
-           "--spb-mode", "temporal", "--spb-k", "4", "--spb-warmup", "20",
-           "--checkpoint-dir", args.ckpt, "--checkpoint-every", "50",
-           "--resume", "--log-every", "10"])
+    tcfg = TrainConfig(learning_rate=3e-4, optimizer="adamw",
+                       num_steps=args.steps, checkpoint_every=50,
+                       checkpoint_dir=args.ckpt, seed=0)
+    spb = SPBConfig(mode="temporal", k=4, warmup_steps=20)
+    hook = SchedulerHookPolicy(cfg, spb, default=CyclePolicy(cfg, spb))
+    engine = SPBEngine(cfg, tcfg, spb, policy=hook)
+    engine.init_state(jax.random.key(tcfg.seed))
+
+    mgr = CheckpointManager(args.ckpt, keep=3)
+    start = 0
+    if mgr.latest_step() is not None:
+        state, start = mgr.restore(engine.state)
+        engine.attach_state(state)
+        print(f"[cluster] resumed from step {start}", flush=True)
+
+    pipe = Pipeline(cfg, args.batch, args.seq, seed=tcfg.seed)
+    controller = None
+    warmup_times = []
+    t_run = time.time()
+    for step in range(start, tcfg.num_steps):
+        t0 = time.perf_counter()
+        metrics = engine.train_step(pipe.get_batch(step), step)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+
+        if controller is None:
+            # the first step of a (possibly resumed) process pays jit
+            # compile — never let it into the budget baseline
+            if step > start:
+                warmup_times.append(dt)
+            if len(warmup_times) >= 3 and step >= spb.warmup_steps:
+                # max, not min: after a resume past warmup the baseline
+                # steps are mixed-depth cycle steps, and the budget must
+                # accommodate a healthy full-depth step
+                budget = (args.budget_ms / 1e3 if args.budget_ms
+                          else 1.5 * max(warmup_times))
+                controller = TimeBudgetController(hook, budget)
+                print(f"[cluster] scheduler hook armed: "
+                      f"budget={budget*1e3:.0f}ms/iter", flush=True)
+        else:
+            controller.after_step(dt)
+
+        if step % 10 == 0 or step == tcfg.num_steps - 1:
+            print(f"[cluster] step={step:4d} depth={engine.last_depth!s:>4} "
+                  f"xent={float(metrics['xent']):.4f} "
+                  f"{dt*1e3:.0f}ms ({time.time()-t_run:.1f}s)", flush=True)
+        if (step + 1) % tcfg.checkpoint_every == 0:
+            mgr.save(jax.device_get(engine.state), step + 1)
+    mgr.wait()
 
 
 if __name__ == "__main__":

@@ -212,3 +212,56 @@ def cache_pspec(cache_shapes: Any, mesh=None) -> Any:
         mesh = _ambient_mesh()
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: _cache_spec(path, leaf, mesh), cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Train-state PartitionSpecs (ZeRO-1 optimizer-state sharding)
+# ---------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard an optimizer-state leaf over the DP axes.
+
+    Among the not-yet-sharded dims divisible by the DP size, the *largest*
+    dim is chosen (not the first): sharding the biggest dim keeps every
+    shard's slice contiguous-ish and maximizes the memory saved per leaf —
+    e.g. a (heads, d_model, d_head) projection shards d_model, not heads.
+    """
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not dp:
+        return spec
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if used & set(dp):
+        return spec
+    best_i, best_dim = None, 0
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp_size == 0 and dim >= dp_size \
+                and dim > best_dim:
+            best_i, best_dim = i, dim
+    if best_i is None:
+        return spec
+    entries[best_i] = tuple(dp) if len(dp) > 1 else dp[0]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def state_pspec(state_shapes: Any, mesh=None, *, zero1: bool = False):
+    """PartitionSpecs for a full train state ({'params','opt','step'})."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    pspec = params_pspec(state_shapes["params"], mesh=mesh)
+    opt = {}
+    for key, sub in state_shapes["opt"].items():
+        sub_spec = params_pspec(sub, mesh=mesh)
+        if zero1 and mesh is not None:
+            sub_spec = jax.tree.map(
+                lambda s, l: zero1_spec(s, l.shape, mesh), sub_spec, sub,
+                is_leaf=lambda x: isinstance(x, P))
+        opt[key] = sub_spec
+    return {"params": pspec, "opt": opt, "step": P()}

@@ -18,7 +18,6 @@ set.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -93,8 +92,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     """Build a (state, batch) -> (state, metrics) step.
 
     ``depth`` is the static SPB suffix depth (None = full backprop).  The
-    returned function is pure — wrap it in ``jax.jit`` directly or via
-    :func:`shard_train_step`.
+    returned function is pure — ``repro.engine.SPBEngine`` owns its
+    compilation (donated ``in_shardings`` signatures + AOT caching).
     """
     grad_fn = _grad_fn(cfg, depth)
 
@@ -270,70 +269,14 @@ def build_spb_train_steps(cfg: ModelConfig, tcfg: TrainConfig,
 # Sharding wrappers (jit + mesh placement)
 # ---------------------------------------------------------------------------
 
-def _zero1_spec(spec: P, shape, mesh) -> P:
-    """ZeRO-1: additionally shard optimizer-state leaves over the DP axes
-    on the first divisible, not-yet-sharded dim."""
-    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
-    if not dp:
-        return spec
-    dp_size = 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for a in dp:
-        dp_size *= sizes[a]
-    entries = list(spec) + [None] * (len(shape) - len(spec))
-    used = {a for e in entries if e is not None
-            for a in (e if isinstance(e, tuple) else (e,))}
-    if used & set(dp):
-        return spec
-    for i, (e, dim) in enumerate(zip(entries, shape)):
-        if e is None and dim % dp_size == 0 and dim >= dp_size:
-            entries[i] = tuple(dp) if len(dp) > 1 else dp[0]
-            return P(*entries)
-    return spec
-
-
-def state_pspec(state_shapes: State, mesh=None, *, zero1: bool = False):
-    """PartitionSpecs for a full train state."""
-    pspec = shd.params_pspec(state_shapes["params"], mesh=mesh)
-    opt = {}
-    for key, sub in state_shapes["opt"].items():
-        sub_spec = shd.params_pspec(sub, mesh=mesh)
-        if zero1 and mesh is not None:
-            sub_spec = jax.tree.map(
-                lambda s, l: _zero1_spec(s, l.shape, mesh), sub_spec, sub,
-                is_leaf=lambda x: isinstance(x, P))
-        opt[key] = sub_spec
-    return {"params": pspec, "opt": opt, "step": P()}
+# Train-state PartitionSpecs live with the rest of the sharding logic;
+# re-exported here because the step table and the state are built together.
+state_pspec = shd.state_pspec
 
 
 def _named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
-
-
-def shard_train_step(fn: Callable, mesh, cfg: ModelConfig,
-                     tcfg: TrainConfig, *, donate: bool = True,
-                     zero1: bool = True):
-    """Jit ``fn`` with the production state/batch placement.
-
-    Returns (jitted, state_shapes, state_shardings).  Input layouts are
-    pinned with in-function sharding constraints so the same wrapper works
-    for any batch pytree (GSPMD propagates the rest).
-    """
-    shapes = train_state_shapes(cfg, tcfg)
-    specs = state_pspec(shapes, mesh=mesh, zero1=zero1)
-    state_sh = _named(mesh, specs)
-
-    def wrapped(state, batch):
-        state = jax.lax.with_sharding_constraint(state, state_sh)
-        batch = jax.lax.with_sharding_constraint(
-            batch, _named(mesh, shd.batch_pspec(batch, mesh=mesh)))
-        new_state, metrics = fn(state, batch)
-        new_state = jax.lax.with_sharding_constraint(new_state, state_sh)
-        return new_state, metrics
-
-    jitted = jax.jit(wrapped, donate_argnums=(0,) if donate else ())
-    return jitted, shapes, state_sh
 
 
 def shard_decode_step(mesh, cfg: ModelConfig, global_batch: int,

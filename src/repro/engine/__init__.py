@@ -1,0 +1,14 @@
+"""The SPB training-session API: one engine object behind every entry
+point (trainer, dry-run, benchmark, examples).
+
+``SPBEngine`` owns mesh + params + optimizer state, compiles the
+per-depth step table with donation-friendly signatures, serializes it
+AOT (``engine.aot``), and delegates the per-iteration depth choice to a
+pluggable ``DepthPolicy`` (``engine.policies``) — the knob the paper's
+cluster scheduler controls.
+"""
+from repro.engine import aot, policies  # noqa: F401
+from repro.engine.engine import SPBEngine  # noqa: F401
+from repro.engine.policies import (  # noqa: F401
+    CostModelPolicy, CyclePolicy, DepthPolicy, FullBackpropPolicy,
+    SchedulerHookPolicy, make_policy)

@@ -1,0 +1,183 @@
+"""AOT step-table persistence: lower/compile once, reuse everywhere.
+
+A compiled per-depth step table is serialized with
+``jax.experimental.serialize_executable`` (the XLA executable itself, not
+a trace recipe), so a fresh process reloads and *runs* the table without
+re-tracing or re-compiling — this is what lets the multi-pod dry-run and
+the trainer share one artifact cache instead of each paying compile time.
+
+Layout of one cache entry (a directory):
+
+    <cache>/<key>/manifest.json          compat metadata + depth index
+    <cache>/<key>/step_<depth>.bin       pickled (payload, in_tree, out_tree)
+
+``<key>`` is a digest of everything the executable depends on: model
+config, optimizer config, SPB config, mesh topology, batch shapes, jax
+version, backend, and device count.  Loading validates the manifest
+against the live process and raises :class:`AOTCompatError` on mismatch
+(an XLA executable is only valid on the topology it was compiled for).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pickle
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+DEFAULT_CACHE = Path(__file__).resolve().parents[3] / "results" / "aot_cache"
+
+_FMT_VERSION = 1
+
+
+class AOTCompatError(RuntimeError):
+    """Serialized step table is incompatible with this process."""
+
+
+def _depth_tag(key: Any) -> str:
+    return "full" if key is None else str(key)
+
+
+def _untag_depth(tag: str) -> Any:
+    if tag == "full":
+        return None
+    try:
+        return int(tag)
+    except ValueError:
+        return tag                      # 'mb'
+
+
+def _shape_sig(tree: Any) -> Any:
+    """JSON-able (path, shape, dtype) signature of a shapes pytree."""
+    sig = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        sig.append([key, list(leaf.shape), str(leaf.dtype)])
+    return sig
+
+
+def _env_sig(mesh) -> Dict[str, Any]:
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "mesh_shape": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+    }
+
+
+def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
+              donate: bool) -> str:
+    """Digest identifying one compiled step table.
+
+    Only fields that reach the compiled program participate — checkpoint /
+    logging knobs don't invalidate the cache."""
+    train = dataclasses.asdict(tcfg)
+    for k in ("checkpoint_every", "checkpoint_dir", "keep_checkpoints",
+              "log_every"):
+        train.pop(k, None)
+    if train.get("compression") == "none":
+        # seed only reaches the compiled step through the compression RNG
+        train.pop("seed", None)
+    ident = {
+        "fmt": _FMT_VERSION,
+        "model": dataclasses.asdict(cfg),
+        "train": train,
+        "spb": dataclasses.asdict(spb),
+        "batch": _shape_sig(batch_shapes),
+        "zero1": zero1,
+        "donate": donate,
+        "env": _env_sig(mesh),
+    }
+    blob = json.dumps(ident, sort_keys=True, default=str).encode()
+    return f"{cfg.name}__{hashlib.sha256(blob).hexdigest()[:16]}"
+
+
+def export_table(compiled: Dict[Any, Any], path: Path, *,
+                 meta: Optional[Dict[str, Any]] = None) -> Path:
+    """Serialize ``{depth_key: compiled_executable}`` under ``path``.
+
+    Additive: entries accumulate across exports into the same directory
+    (the dry-run exports one depth per invocation), as long as the
+    existing manifest was written by a compatible process; an
+    incompatible manifest is overwritten wholesale.
+    """
+    from jax.experimental import serialize_executable as se
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    env = {**(meta or {}),
+           "jax_version": jax.__version__,
+           "backend": jax.default_backend(),
+           "device_count": jax.device_count()}
+    entries: Dict[str, str] = {}
+    mf_path = path / "manifest.json"
+    if mf_path.exists():
+        try:
+            old = json.loads(mf_path.read_text())
+            same_env = all(old.get("env", {}).get(k) == env[k]
+                           for k in ("jax_version", "backend",
+                                     "device_count"))
+            if old.get("fmt") == _FMT_VERSION and same_env:
+                entries = dict(old.get("entries", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+    for key, exe in compiled.items():
+        tag = _depth_tag(key)
+        payload, in_tree, out_tree = se.serialize(exe)
+        fname = f"step_{tag}.bin"
+        (path / fname).write_bytes(
+            pickle.dumps((payload, in_tree, out_tree)))
+        entries[tag] = fname
+    manifest = {"fmt": _FMT_VERSION, "env": env, "entries": entries}
+    mf_path.write_text(json.dumps(manifest, indent=2))
+    return path
+
+
+def table_exists(path: Path) -> bool:
+    return (Path(path) / "manifest.json").exists()
+
+
+def import_table(path: Path, *, expect_mesh=None) -> Dict[Any, Callable]:
+    """Load a serialized step table; no tracing or compilation happens.
+
+    Raises :class:`AOTCompatError` when the manifest does not match the
+    live process (jax version / backend / device count — and, when
+    ``expect_mesh`` is given, the mesh shape/axes the table was compiled
+    for: an executable's input shardings are mesh-specific).
+    """
+    from jax.experimental import serialize_executable as se
+    path = Path(path)
+    mf_path = path / "manifest.json"
+    if not mf_path.exists():
+        raise FileNotFoundError(f"no AOT step table at {path}")
+    manifest = json.loads(mf_path.read_text())
+    if manifest.get("fmt") != _FMT_VERSION:
+        raise AOTCompatError(
+            f"step-table format {manifest.get('fmt')} != {_FMT_VERSION}")
+    env = manifest.get("env", {})
+    live = {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count()}
+    if expect_mesh is not None:
+        live["mesh_shape"] = list(expect_mesh.devices.shape)
+        live["mesh_axes"] = list(expect_mesh.axis_names)
+    for k, v in live.items():
+        if k in ("mesh_shape", "mesh_axes") and k not in env:
+            continue                    # pre-topology manifests
+        if env.get(k) != v:
+            raise AOTCompatError(
+                f"serialized for {k}={env.get(k)!r}, this process has {v!r}")
+    table: Dict[Any, Callable] = {}
+    for tag, fname in manifest["entries"].items():
+        payload, in_tree, out_tree = pickle.loads((path / fname).read_bytes())
+        table[_untag_depth(tag)] = se.deserialize_and_load(
+            payload, in_tree, out_tree)
+    return table
+
+
+def read_manifest(path: Path) -> Dict[str, Any]:
+    return json.loads((Path(path) / "manifest.json").read_text())

@@ -1,0 +1,273 @@
+"""SPBEngine: one training-session object behind every entry point.
+
+Before this package, each consumer (train driver, dry-run, benchmark,
+example) hand-wired the same pipeline — build per-depth step functions,
+jit them, recompute state shapes, pick a depth per step — with slightly
+different (and drifting) choices: the trainer disabled donation, the
+dry-run recomputed state shapes per depth, the benchmark bypassed
+sharding entirely.  ``SPBEngine`` owns that pipeline once:
+
+* **mesh + params + optimizer state** — the session owns the train state;
+  entry points never touch placement.
+* **a pluggable DepthPolicy** — the paper's "how much backprop this
+  iteration" knob (cycle schedule, cost-model budget, or an external
+  JobSpec-level scheduler via the hook policy).
+* **a compiled per-depth step table with real signatures** — jit'd with
+  ``in_shardings``/``out_shardings`` + ``donate_argnums=(0,)`` so params
+  and optimizer state update in place (the old path pinned layouts with
+  in-function constraints and ran with ``donate=False``).
+* **AOT lower/compile + export/import** — the table serializes to disk
+  (``engine/aot.py``) and a fresh process reloads it without re-tracing,
+  so dry-run artifacts and the trainer share one cache.
+
+The per-depth step *functions* are unchanged — ``dist/steps.py`` remains
+the engine's internals; this module owns their compilation and lifecycle.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, SPBConfig, TrainConfig, snap_depth
+from repro.dist import sharding as shd
+from repro.dist import steps as steps_lib
+from repro.engine import aot
+from repro.engine.policies import DepthPolicy, make_policy
+from repro.launch.mesh import make_host_mesh
+
+State = Dict[str, Any]
+
+
+class SPBEngine:
+    """A training session: mesh + state + depth policy + step table.
+
+    Typical use::
+
+        engine = SPBEngine(cfg, tcfg, spb_cfg)
+        engine.init_state(jax.random.key(0))
+        for step in range(tcfg.num_steps):
+            metrics = engine.train_step(pipe.get_batch(step), step)
+
+    AOT use (dry-run / cache-sharing)::
+
+        specs = engine.batch_specs_like(sample_batch)
+        engine.compile_table(specs)
+        engine.export_aot(cache_dir, specs)     # other processes import
+    """
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 spb_cfg: Optional[SPBConfig] = None, *,
+                 mesh=None, policy: Optional[DepthPolicy] = None,
+                 donate: bool = True, zero1: bool = True):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.spb = spb_cfg or SPBConfig()
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.donate = donate
+        self.zero1 = zero1
+        self.policy = policy or make_policy("cycle", cfg, self.spb)
+
+        # the old dist.steps functions are the engine's internals
+        self._raw: Dict[Any, Callable] = steps_lib.build_spb_train_steps(
+            cfg, tcfg, self.spb)
+
+        # shapes + shardings computed exactly once for the whole session
+        # (the pre-engine drivers recomputed these per depth and dropped
+        # the result)
+        self.state_shapes: State = steps_lib.train_state_shapes(cfg, tcfg)
+        self.state_specs = shd.state_pspec(self.state_shapes, mesh=self.mesh,
+                                           zero1=zero1)
+        self.state_shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        # one prefix sharding covers every batch leaf: dim 0 over the DP
+        # axes, the rest replicated
+        self.batch_sharding = NamedSharding(
+            self.mesh, shd.spec_for(("batch",), mesh=self.mesh))
+        self._metrics_sharding = NamedSharding(self.mesh, P())
+
+        self._steps: Dict[Any, Callable] = {}      # jitted or AOT-loaded
+        self._compiled: Dict[Any, Any] = {}        # AOT Compiled objects
+        self._frozen = False                       # True after AOT import
+        self._warned_depths: set = set()
+        self.state: Optional[State] = None
+        self.last_depth: Any = None
+        self._auto_step = 0
+
+    # -- state lifecycle ---------------------------------------------------
+
+    def init_state(self, key) -> State:
+        """Initialize and place the session's train state."""
+        with jax.sharding.set_mesh(self.mesh):
+            state = steps_lib.init_train_state(key, self.cfg, self.tcfg)
+        return self.attach_state(state)
+
+    def attach_state(self, state: State) -> State:
+        """Adopt an externally built/restored state (re-places it)."""
+        self.state = jax.device_put(state, self.state_shardings)
+        return self.state
+
+    @property
+    def step_count(self) -> int:
+        return int(self.state["step"]) if self.state is not None else 0
+
+    # -- step table --------------------------------------------------------
+
+    def depth_keys(self):
+        """Keys of the session's step table."""
+        seen = dict.fromkeys(list(self._raw) + list(self._steps))
+        return list(seen)
+
+    def _raw_step(self, key: Any) -> Callable:
+        if key not in self._raw:
+            # lazily extend the table for off-cycle depths (hook policy)
+            self._raw[key] = steps_lib.make_train_step(
+                self.cfg, self.tcfg, self.spb, depth=key)
+        return self._raw[key]
+
+    def _jit(self, key: Any):
+        return jax.jit(
+            self._raw_step(key),
+            in_shardings=(self.state_shardings, self.batch_sharding),
+            out_shardings=(self.state_shardings, self._metrics_sharding),
+            donate_argnums=(0,) if self.donate else ())
+
+    def step_fn(self, key: Any) -> Callable:
+        """The (state, batch) -> (state, metrics) executable for a depth
+        key (None = full backprop, int = suffix depth, 'mb' = cycle)."""
+        if key not in self._steps:
+            if self._frozen:
+                raise KeyError(
+                    f"AOT step table has no entry for depth {key!r}; "
+                    f"available: {sorted(map(str, self._steps))}")
+            with jax.sharding.set_mesh(self.mesh):
+                self._steps[key] = self._jit(key)
+        return self._steps[key]
+
+    def resolve_depth(self, depth: Optional[int]) -> Any:
+        """Map a policy-requested depth to a step-table key.
+
+        Depths snap UP to unit boundaries (never less backprop).  When the
+        table is frozen (AOT-imported), an absent depth resolves to the
+        nearest *deeper* available entry — deeper is always convergence-
+        safe — with a warning; if no deeper entry exists this is a hard
+        error, because silently running full backprop instead would erase
+        the SPB savings without any visible failure."""
+        if depth is None:
+            return None
+        depth = snap_depth(self.cfg, depth)
+        if not self._frozen or depth in self._steps:
+            return depth
+        deeper = sorted(k for k in self._steps
+                        if isinstance(k, int) and k >= depth)
+        if not deeper:
+            raise KeyError(
+                f"AOT step table has no entry at or deeper than depth "
+                f"{depth}; available: {sorted(map(str, self._steps))} — "
+                f"recompile the table or widen the exported depth set")
+        if depth not in self._warned_depths:
+            self._warned_depths.add(depth)
+            import warnings
+            warnings.warn(
+                f"AOT step table missing depth {depth}; substituting "
+                f"deeper entry {deeper[0]} (more backprop than scheduled)",
+                stacklevel=3)
+        return deeper[0]
+
+    def depth_key_for_step(self, step: int) -> Any:
+        if self.spb.mode in ("off", "spatial"):
+            return None                 # spatial owns depth inside the step
+        if self.spb.mode == "temporal-mb":
+            return "mb"
+        return self.resolve_depth(self.policy.depth_for_step(step))
+
+    # -- training ----------------------------------------------------------
+
+    _POLICY = object()          # sentinel: "ask the depth policy"
+
+    def train_step(self, batch, step: Optional[int] = None, *,
+                   depth: Any = _POLICY) -> Dict[str, jax.Array]:
+        """Run one training step on the session state; the policy picks
+        the depth unless ``depth`` overrides it (a table key: None, an
+        int suffix depth, or 'mb').  Returns the metrics dict (state
+        advances in place — the previous state's buffers are donated)."""
+        if self.state is None:
+            raise RuntimeError("call init_state()/attach_state() first")
+        if step is None:
+            step = self._auto_step
+        key = (self.depth_key_for_step(step) if depth is SPBEngine._POLICY
+               else depth)
+        fn = self.step_fn(key)
+        t0 = time.perf_counter()
+        with jax.sharding.set_mesh(self.mesh):
+            self.state, metrics = fn(self.state, batch)
+        if getattr(self.policy, "needs_step_time", False):
+            # async backends return at dispatch; a timing-driven policy
+            # needs true wall-clock, at the cost of pipelining
+            jax.block_until_ready(metrics)
+        self.policy.observe(step, time.perf_counter() - t0)
+        self.last_depth = key
+        self._auto_step = step + 1
+        return metrics
+
+    # -- AOT: lower / compile / export / import ----------------------------
+
+    def batch_specs_like(self, batch) -> Any:
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch)
+
+    def lower_step(self, batch_specs, *, depth: Any = None):
+        """AOT-lower one step (any depth) against the session signatures;
+        returns the jax Lowered (for HLO/cost analysis or .compile())."""
+        with jax.sharding.set_mesh(self.mesh):
+            return self._jit(depth).lower(self.state_shapes, batch_specs)
+
+    def compile_table(self, batch_specs, *, depths=None) -> Dict[Any, Any]:
+        """AOT lower+compile the step table.  Compiled entries replace the
+        lazy jit wrappers, so subsequent train_step calls use them."""
+        keys = list(self._raw) if depths is None else list(depths)
+        for key in keys:
+            if key in self._compiled:
+                continue
+            compiled = self.lower_step(batch_specs, depth=key).compile()
+            self._compiled[key] = compiled
+            self._steps[key] = compiled
+        return dict(self._compiled)
+
+    def memory_analysis(self, key: Any = None):
+        """Memory analysis of a compiled entry (compile_table first)."""
+        return self._compiled[key].memory_analysis()
+
+    def aot_cache_path(self, batch_specs, cache_root=None) -> Path:
+        root = Path(cache_root) if cache_root else aot.DEFAULT_CACHE
+        return root / aot.cache_key(self.cfg, self.tcfg, self.spb, self.mesh,
+                                    batch_specs, zero1=self.zero1,
+                                    donate=self.donate)
+
+    def export_aot(self, path, batch_specs=None) -> Path:
+        """Serialize the compiled step table to ``path`` (compiling first
+        if needed — requires ``batch_specs`` in that case)."""
+        if not self._compiled:
+            if batch_specs is None:
+                raise ValueError("no compiled table; pass batch_specs")
+            self.compile_table(batch_specs)
+        return aot.export_table(
+            self._compiled, Path(path),
+            meta={"arch": self.cfg.name, "spb_mode": self.spb.mode,
+                  "mesh_shape": list(self.mesh.devices.shape),
+                  "mesh_axes": list(self.mesh.axis_names)})
+
+    def load_aot(self, path) -> bool:
+        """Import a serialized step table (no tracing/compiling).  Returns
+        False when ``path`` has no table; raises AOTCompatError on a
+        topology mismatch."""
+        if not aot.table_exists(path):
+            return False
+        table = aot.import_table(path, expect_mesh=self.mesh)
+        self._steps.update(table)
+        self._frozen = True
+        return True

@@ -32,6 +32,8 @@ from repro.configs import (cells, decode_token_specs, get_config, input_specs,
                            shape_skip_reason)
 from repro.dist import sharding as shd
 from repro.dist import steps as steps_lib
+from repro.engine import SPBEngine
+from repro.engine import aot as aot_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 
@@ -69,7 +71,7 @@ def _shape_overrides(cfg, shape):
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                depth=None, remat: str = "full", zero1: bool = True,
-               rules_extra=None, cfg_overrides=None):
+               rules_extra=None, cfg_overrides=None, export_aot: bool = True):
     """Lower + compile one cell; returns the result record."""
     shape = SHAPES[shape_name]
     cfg = _shape_overrides(get_config(arch), shape)
@@ -92,23 +94,24 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     try:
         return _lower_cell_inner(arch, shape_name, cfg, shape, mesh,
                                  mesh_name, nchips, rules_overrides, depth,
-                                 zero1)
+                                 zero1, export_aot)
     finally:
         REMAT.reset(remat_token)
 
 
 def _lower_cell_inner(arch, shape_name, cfg, shape, mesh, mesh_name, nchips,
-                      rules_overrides, depth, zero1):
+                      rules_overrides, depth, zero1, export_aot):
     t0 = time.time()
+    engine = None
     with jax.sharding.set_mesh(mesh), shd.rules(rules_overrides):
         if shape.kind == "train":
             tcfg = TrainConfig(optimizer="adamw")
-            step = steps_lib.make_train_step(cfg, tcfg, SPBConfig(),
-                                             depth=depth)
-            jitted, shapes, _ = steps_lib.shard_train_step(
-                step, mesh, cfg, tcfg, zero1=zero1)
+            # the engine owns signatures (donated in_shardings) and state
+            # shapes — computed once, not re-derived per depth
+            engine = SPBEngine(cfg, tcfg, SPBConfig(), mesh=mesh,
+                               zero1=zero1)
             batch = input_specs(cfg, shape)
-            lowered = jitted.lower(shapes, batch)
+            lowered = engine.lower_step(batch, depth=depth)
         elif shape.kind == "prefill":
             params_shapes = lm.param_shapes(cfg)
             cache_shapes = lm.cache_shapes(
@@ -152,6 +155,21 @@ def _lower_cell_inner(arch, shape_name, cfg, shape, mesh, mesh_name, nchips,
     except Exception:           # noqa: BLE001
         pass
 
+    aot_path = None
+    if engine is not None and export_aot:
+        # one cache for every entry point, keyed by config + batch shapes
+        # + mesh topology (engine/aot.py): a later process with the same
+        # cell (another dry-run pass, or a trainer on this topology)
+        # reuses the executable instead of recompiling
+        try:
+            aot_path = engine.aot_cache_path(batch)
+            aot_lib.export_table({depth: compiled}, aot_path,
+                                 meta={"arch": arch, "shape": shape_name,
+                                       "mesh_shape": list(mesh.devices.shape),
+                                       "mesh_axes": list(mesh.axis_names)})
+        except Exception as e:  # noqa: BLE001 — cache is best-effort
+            aot_path = f"export failed: {e}"
+
     cost = hlo_analysis.analyze(compiled.as_text(), num_partitions=nchips)
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -168,6 +186,8 @@ def _lower_cell_inner(arch, shape_name, cfg, shape, mesh, mesh_name, nchips,
         "memory_analysis": _mem_analysis(compiled),
         "xla_cost_analysis_unscaled": xla_cost,
     }
+    if aot_path is not None:
+        rec["aot_cache"] = str(aot_path)
     return rec
 
 
@@ -204,6 +224,9 @@ def main():
     ap.add_argument("--tag", default="", help="variant tag for perf iters")
     ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
     ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-export-aot", action="store_true",
+                    help="skip writing compiled train steps to the shared "
+                         "AOT cache (results/aot_cache)")
     args = ap.parse_args()
 
     todo = []
@@ -225,7 +248,8 @@ def main():
             continue
         rec = run_cell(arch, shape, multi_pod=mp, depth=args.depth,
                        force=args.force, tag=args.tag, remat=args.remat,
-                       zero1=not args.no_zero1)
+                       zero1=not args.no_zero1,
+                       export_aot=not args.no_export_aot)
         if rec.get("ok"):
             ma = rec.get("memory_analysis", {})
             print(f"OK  {arch:24s} {shape:12s} {rec['mesh']:10s} "

@@ -29,8 +29,17 @@ def serve(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # --greedy used to be store_true with default True, so it could never
+    # be turned off; sampling is now the explicit opt-in.
+    ap.add_argument("--sample", action="store_true", default=False,
+                    help="sample from the softmax instead of greedy argmax")
+    ap.add_argument("--greedy", dest="sample", action="store_false",
+                    help="greedy argmax decode (the default)")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --sample (> 0)")
     args = ap.parse_args(argv)
+    if args.sample and args.temperature <= 0:
+        ap.error("--temperature must be > 0 when sampling")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_host_mesh()
@@ -58,24 +67,38 @@ def serve(argv=None):
         prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
         decode = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg))
 
+        # temperature is threaded through a jitted token picker so the
+        # sampled path stays on-device (no host round-trip per token)
+        if args.sample:
+            pick = jax.jit(lambda lg, k: jax.random.categorical(
+                k, lg[..., :cfg.vocab_size] / args.temperature,
+                axis=-1).astype(jnp.int32))
+        else:
+            pick = jax.jit(lambda lg, k: jnp.argmax(
+                lg[..., :cfg.vocab_size], axis=-1).astype(jnp.int32))
+        sample_key = jax.random.key(args.seed + 1)
+
         t0 = time.time()
         logits, cache = prefill(params, batch, cache)
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
-        tok = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        sample_key, k0 = jax.random.split(sample_key)
+        tok = pick(logits, k0)
         out_tokens = [tok]
         t0 = time.time()
         for _ in range(args.gen - 1):
             logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+            sample_key, ki = jax.random.split(sample_key)
+            tok = pick(logits, ki)
             out_tokens.append(tok)
         tok.block_until_ready()
         t_decode = time.time() - t0
 
     seq = jnp.concatenate(out_tokens, axis=1)
     tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
+    mode = f"sample(T={args.temperature:g})" if args.sample else "greedy"
+    print(f"[serve] arch={cfg.name} batch={args.batch} {mode} "
           f"prefill({args.prompt_len} tok)={t_prefill*1e3:.1f}ms "
           f"decode={args.gen-1}steps {tps:.1f} tok/s")
     print(f"[serve] sample continuation ids: {np.asarray(seq[0, :16])}")

@@ -1,42 +1,42 @@
-"""End-to-end training driver with SPB, checkpointing and auto-restart.
+"""End-to-end training driver: a thin client of ``repro.engine.SPBEngine``
+with checkpointing and auto-restart.
 
 Examples (CPU host mesh, reduced configs):
   python -m repro.launch.train --arch yi-6b --reduced --steps 60 \\
       --spb-mode temporal --spb-k 4 --checkpoint-dir /tmp/ckpt
-  python -m repro.launch.train --arch mamba2-2.7b --reduced --steps 30 \\
-      --batch 8 --seq 128 --optimizer sgdm
+  python -m repro.launch.train --arch yi-6b --reduced --steps 30 \\
+      --spb-mode temporal --depth-policy costmodel --time-budget 0.6
+  python -m repro.launch.train --arch yi-6b --reduced --steps 20 \\
+      --spb-mode temporal --aot-cache results/aot_cache   # reuse compiles
 
-Fault tolerance: the supervision loop catches step failures (and the
-``--fail-at`` injection used by tests), restores the latest checkpoint and
-resumes — on a different DP width if the device count changed (elastic).
+The engine owns mesh/state/step-table; this driver owns the loop: data,
+logging, checkpoints, and the supervision loop that catches step failures
+(and the ``--fail-at`` injection used by tests), restores the latest
+checkpoint and resumes — on a different DP width if the device count
+changed (elastic).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import get_config, reduced_config
-from repro.core import spb as spb_lib
 from repro.data.pipeline import Pipeline
-from repro.dist import steps as steps_lib
+from repro.engine import SPBEngine, make_policy
 from repro.launch.mesh import make_host_mesh
 
 
-def build(cfg, tcfg, spb_cfg, mesh):
-    step_fns = steps_lib.build_spb_train_steps(cfg, tcfg, spb_cfg)
-    jitted = {}
-    for d, fn in step_fns.items():
-        jitted[d], shapes, _ = steps_lib.shard_train_step(fn, mesh, cfg, tcfg,
-                                                          donate=False)
-    return jitted
+def build_engine(cfg, tcfg, spb_cfg, mesh, *, depth_policy: str = "cycle",
+                 time_budget: float = 0.75, donate: bool = True) -> SPBEngine:
+    """The one construction path every entry point shares."""
+    policy = make_policy(depth_policy, cfg, spb_cfg,
+                         time_budget_frac=time_budget)
+    return SPBEngine(cfg, tcfg, spb_cfg, mesh=mesh, policy=policy,
+                     donate=donate)
 
 
 def train(argv=None):
@@ -54,6 +54,19 @@ def train(argv=None):
                     choices=["off", "temporal", "temporal-mb", "spatial"])
     ap.add_argument("--spb-k", type=int, default=4)
     ap.add_argument("--spb-warmup", type=int, default=0)
+    ap.add_argument("--depth-policy", default="cycle",
+                    choices=["cycle", "costmodel", "hook"],
+                    help="who picks the per-step backprop depth")
+    ap.add_argument("--time-budget", type=float, default=0.75,
+                    help="costmodel policy: step-time budget as a fraction "
+                         "of a full-backprop step")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable buffer donation (debugging)")
+    ap.add_argument("--aot-cache", default="",
+                    help="directory of serialized step tables (same cache "
+                         "the dry-run writes); a process with matching "
+                         "config + mesh topology reuses the table with no "
+                         "re-trace/re-compile")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=20)
@@ -96,46 +109,45 @@ def train(argv=None):
 
 
 def _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history):
-    with jax.sharding.set_mesh(mesh):
-        jitted = build(cfg, tcfg, spb_cfg, mesh)
-        state = steps_lib.init_train_state(jax.random.key(tcfg.seed), cfg, tcfg)
-        start_step = 0
-        if args.resume and mgr and mgr.latest_step() is not None:
-            state, start_step = mgr.restore(state)
-            print(f"[train] resumed from step {start_step}", flush=True)
+    engine = build_engine(cfg, tcfg, spb_cfg, mesh,
+                          depth_policy=args.depth_policy,
+                          time_budget=args.time_budget,
+                          donate=not args.no_donate)
+    engine.init_state(jax.random.key(tcfg.seed))
+    start_step = 0
+    if args.resume and mgr and mgr.latest_step() is not None:
+        state, start_step = mgr.restore(engine.state)
+        engine.attach_state(state)
+        print(f"[train] resumed from step {start_step}", flush=True)
 
-        pipe = Pipeline(cfg, args.batch, args.seq, seed=tcfg.seed)
-        sched = (spb_lib.make_schedule(cfg, spb_cfg)
-                 if spb_cfg.mode in ("temporal",) else None)
+    pipe = Pipeline(cfg, args.batch, args.seq, seed=tcfg.seed)
+    if args.aot_cache:
+        specs = engine.batch_specs_like(pipe.get_batch(0))
+        path = engine.aot_cache_path(specs, args.aot_cache)
+        if engine.load_aot(path):
+            print(f"[train] AOT step table loaded from {path} "
+                  f"(no re-trace)", flush=True)
+        else:
+            engine.compile_table(specs)
+            engine.export_aot(path)
+            print(f"[train] AOT step table compiled + exported to {path}",
+                  flush=True)
 
-        t0 = time.time()
-        for step in range(start_step, tcfg.num_steps):
-            if step == args.fail_at:
-                raise RuntimeError("injected failure")
-            batch = pipe.get_batch(step)
-            if spb_cfg.mode == "temporal":
-                d = sched.depth_at(step)
-                if d not in jitted:
-                    # a silent fallback to the full-depth step would erase
-                    # the SPB savings without any visible failure
-                    raise KeyError(
-                        f"no jitted SPB step for snapped depth {d}; "
-                        f"available depths: {sorted(k for k in jitted if isinstance(k, int))}")
-                fn = jitted[d]
-            elif spb_cfg.mode == "temporal-mb":
-                fn = jitted["mb"]
-            else:
-                fn = jitted[None]
-            state, metrics = fn(state, batch)
-            if step % args.log_every == 0 or step == tcfg.num_steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                print(f"[train] step={step:5d} loss={m['loss']:.4f} "
-                      f"xent={m['xent']:.4f} gnorm={m['grad_norm']:.3f} "
-                      f"lr={m['lr']:.2e} ({time.time()-t0:.1f}s)", flush=True)
-            history.append(float(metrics["xent"]))
-            if mgr and (step + 1) % tcfg.checkpoint_every == 0:
-                mgr.save(jax.device_get(state), step + 1)
-        return history
+    t0 = time.time()
+    for step in range(start_step, tcfg.num_steps):
+        if step == args.fail_at:
+            raise RuntimeError("injected failure")
+        metrics = engine.train_step(pipe.get_batch(step), step)
+        if step % args.log_every == 0 or step == tcfg.num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"[train] step={step:5d} depth={engine.last_depth!s:>4} "
+                  f"loss={m['loss']:.4f} xent={m['xent']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        history.append(float(metrics["xent"]))
+        if mgr and (step + 1) % tcfg.checkpoint_every == 0:
+            mgr.save(jax.device_get(engine.state), step + 1)
+    return history
 
 
 if __name__ == "__main__":

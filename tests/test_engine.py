@@ -1,0 +1,317 @@
+"""The SPBEngine session API: smoke training, donated buffers, AOT
+export/import (fresh process, no re-trace), and the pluggable depth
+policies (cycle ≡ existing schedule; scheduler hook honors external
+depth; cost model respects its budget)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SPBConfig, TrainConfig, snap_depth, total_layers
+from repro.configs import make_batch, reduced_config
+from repro.core import spb as spb_lib
+from repro.engine import (CostModelPolicy, CyclePolicy, DepthPolicy,
+                          SPBEngine, SchedulerHookPolicy, make_policy)
+from repro.jigsaw.costmodel import ModelProfile
+
+ARCH = "yi-6b"
+
+
+def _setup(spb_mode="temporal", k=4, **tkw):
+    cfg = reduced_config(ARCH)
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=3e-3, num_steps=20,
+                       warmup_steps=2, **tkw)
+    return cfg, tcfg, SPBConfig(mode=spb_mode, k=k)
+
+
+# ---------------------------------------------------------------------------
+# Session basics
+# ---------------------------------------------------------------------------
+
+def test_engine_smoke_train():
+    """Two SPB steps through the session API: state advances in place,
+    metrics are finite, the policy's depth is recorded."""
+    cfg, tcfg, spb = _setup()
+    engine = SPBEngine(cfg, tcfg, spb)
+    engine.init_state(jax.random.key(0))
+    batch = make_batch(cfg, 4, 64)
+    for step in range(2):
+        metrics = engine.train_step(batch, step)
+        assert np.isfinite(float(metrics["xent"]))
+        assert engine.last_depth in engine.depth_keys()
+    assert engine.step_count == 2
+
+
+def test_engine_exposes_shapes_and_shardings_once():
+    """The session computes state shapes/shardings once and exposes them
+    (the pre-engine drivers recomputed and then discarded them)."""
+    cfg, tcfg, spb = _setup()
+    engine = SPBEngine(cfg, tcfg, spb)
+    state = engine.init_state(jax.random.key(0))
+    assert (jax.tree.structure(engine.state_shapes)
+            == jax.tree.structure(state))
+    for shaped, live in zip(jax.tree.leaves(engine.state_shapes),
+                            jax.tree.leaves(state)):
+        assert tuple(shaped.shape) == tuple(live.shape)
+    shardings = jax.tree.leaves(
+        engine.state_shardings,
+        is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+    assert shardings and all(
+        isinstance(s, jax.sharding.NamedSharding) for s in shardings)
+
+
+def test_engine_donation_aliases_state_buffers():
+    """The step table is compiled with donate_argnums for params/opt-state:
+    the executable aliases input to output (alias_size_in_bytes > 0) and
+    the previous state's buffers are consumed by the step."""
+    cfg, tcfg, spb = _setup()
+    engine = SPBEngine(cfg, tcfg, spb)
+    batch = make_batch(cfg, 4, 64)
+    engine.compile_table(engine.batch_specs_like(batch), depths=[None])
+    ma = engine.memory_analysis(None)
+    assert int(ma.alias_size_in_bytes) > 0
+
+    engine.init_state(jax.random.key(0))
+    old_leaf = jax.tree.leaves(engine.state["params"])[0]
+    engine.train_step(batch, 0, depth=None)
+    assert old_leaf.is_deleted()
+
+
+def test_engine_no_donate_keeps_buffers():
+    cfg, tcfg, spb = _setup()
+    engine = SPBEngine(cfg, tcfg, spb, donate=False)
+    engine.init_state(jax.random.key(0))
+    old_leaf = jax.tree.leaves(engine.state["params"])[0]
+    engine.train_step(make_batch(cfg, 4, 64), 0)
+    assert not old_leaf.is_deleted()
+
+
+def test_engine_donated_run_matches_undonated():
+    """Donation is a memory optimization, not a numerics change."""
+    cfg, tcfg, spb = _setup()
+    batch = make_batch(cfg, 4, 64)
+    hist = {}
+    for donate in (True, False):
+        engine = SPBEngine(cfg, tcfg, spb, donate=donate)
+        engine.init_state(jax.random.key(0))
+        hist[donate] = [float(engine.train_step(batch, s)["xent"])
+                        for s in range(3)]
+    np.testing.assert_allclose(hist[True], hist[False], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# AOT round trip
+# ---------------------------------------------------------------------------
+
+def test_aot_roundtrip_same_process(tmp_path):
+    """Export -> import in a second engine: identical first-step metrics
+    without the importer ever tracing."""
+    cfg, tcfg, spb = _setup()
+    batch = make_batch(cfg, 2, 32)
+
+    src = SPBEngine(cfg, tcfg, spb)
+    specs = src.batch_specs_like(batch)
+    src.compile_table(specs)
+    path = src.export_aot(tmp_path / "table")
+    src.init_state(jax.random.key(0))
+    want = float(src.train_step(batch, 0)["xent"])
+
+    dst = SPBEngine(cfg, tcfg, spb)
+    assert dst.load_aot(path)
+    dst.init_state(jax.random.key(0))
+    got = float(dst.train_step(batch, 0)["xent"])
+    assert got == want
+    assert dst.last_depth == src.last_depth
+
+
+def test_aot_frozen_table_resolves_deeper(tmp_path):
+    """An AOT-imported table with a missing depth resolves to the nearest
+    deeper entry (never shallower — deeper is convergence-safe) with a
+    warning; with no deeper entry it fails loudly rather than silently
+    running full backprop (which would erase the SPB savings)."""
+    cfg, tcfg, spb = _setup()
+    batch = make_batch(cfg, 2, 32)
+    specs_batch = make_batch(cfg, 2, 32)
+    deepest = max(spb_lib.snapped_depths(cfg, spb))
+
+    src = SPBEngine(cfg, tcfg, spb)
+    src.compile_table(src.batch_specs_like(batch), depths=[deepest])
+    path = src.export_aot(tmp_path / "partial")
+
+    dst = SPBEngine(cfg, tcfg, spb)
+    assert dst.load_aot(path)
+    with pytest.warns(UserWarning, match="substituting deeper"):
+        assert dst.resolve_depth(1) == deepest
+    with pytest.raises(KeyError):
+        dst.step_fn("mb")
+
+    # shallow-only table: a deeper request must hard-error
+    src2 = SPBEngine(cfg, tcfg, spb)
+    src2.compile_table(src2.batch_specs_like(specs_batch), depths=[1])
+    path2 = src2.export_aot(tmp_path / "shallow")
+    dst2 = SPBEngine(cfg, tcfg, spb)
+    assert dst2.load_aot(path2)
+    with pytest.raises(KeyError, match="deeper"):
+        dst2.resolve_depth(2)
+
+
+def test_aot_export_is_additive(tmp_path):
+    """Successive exports into one cache dir accumulate entries instead
+    of clobbering the manifest (the dry-run exports one depth per run)."""
+    from repro.engine import aot as aot_lib
+    cfg, tcfg, spb = _setup()
+    batch = make_batch(cfg, 2, 32)
+    eng = SPBEngine(cfg, tcfg, spb)
+    specs = eng.batch_specs_like(batch)
+    tab = eng.compile_table(specs, depths=[1, 2])
+    aot_lib.export_table({1: tab[1]}, tmp_path / "acc")
+    aot_lib.export_table({2: tab[2]}, tmp_path / "acc")
+    loaded = aot_lib.import_table(tmp_path / "acc")
+    assert set(loaded) == {1, 2}
+
+
+def test_aot_import_rejects_mesh_mismatch(tmp_path):
+    """An executable's input shardings are mesh-specific: importing under
+    a different mesh topology must fail loudly, not at first step."""
+    import types
+    from repro.engine import aot as aot_lib
+    cfg, tcfg, spb = _setup()
+    src = SPBEngine(cfg, tcfg, spb)
+    src.compile_table(src.batch_specs_like(make_batch(cfg, 2, 32)),
+                      depths=[None])
+    path = src.export_aot(tmp_path / "table")
+    wrong = types.SimpleNamespace(axis_names=("data", "model"),
+                                  devices=np.empty((2, 1)))
+    with pytest.raises(aot_lib.AOTCompatError):
+        aot_lib.import_table(path, expect_mesh=wrong)
+    assert aot_lib.import_table(path, expect_mesh=src.mesh)
+
+
+def test_aot_roundtrip_fresh_process(tmp_path):
+    """A fresh process imports the serialized step table and runs a train
+    step with tracing poisoned — proof that execution comes from the
+    deserialized executable, not a re-trace."""
+    cfg, tcfg, spb = _setup()
+    batch = make_batch(cfg, 2, 32)
+    src = SPBEngine(cfg, tcfg, spb)
+    src.compile_table(src.batch_specs_like(batch))
+    path = src.export_aot(tmp_path / "table")
+    src.init_state(jax.random.key(0))
+    want = float(src.train_step(batch, 0)["xent"])
+
+    root = Path(__file__).resolve().parents[1]
+    script = textwrap.dedent(f"""
+        import repro.models.lm as lm
+        def _boom(*a, **k):
+            raise RuntimeError("loss_fn traced — AOT import re-traced!")
+        lm.loss_fn = _boom
+
+        import jax
+        from repro.config import SPBConfig, TrainConfig
+        from repro.configs import make_batch, reduced_config
+        from repro.engine import SPBEngine
+
+        cfg = reduced_config({ARCH!r})
+        tcfg = TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                           num_steps=20, warmup_steps=2)
+        engine = SPBEngine(cfg, tcfg, SPBConfig(mode="temporal", k=4))
+        assert engine.load_aot({str(path)!r})
+        engine.init_state(jax.random.key(0))
+        m = engine.train_step(make_batch(cfg, 2, 32), 0)
+        print("XENT", float(m["xent"]))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          cwd=root, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    got = float(proc.stdout.split("XENT")[-1])
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Depth policies
+# ---------------------------------------------------------------------------
+
+def test_cycle_policy_matches_temporal_schedule():
+    cfg, _, spb = _setup()
+    spb = SPBConfig(mode="temporal", k=4, warmup_steps=3)
+    policy = CyclePolicy(cfg, spb)
+    sched = spb_lib.make_schedule(cfg, spb)
+    for step in range(3 * spb.k + spb.warmup_steps):
+        assert policy.depth_for_step(step) == sched.depth_at(step)
+    assert isinstance(policy, DepthPolicy)
+
+
+def test_scheduler_hook_honors_external_depth():
+    """The JobSpec-level controller's request wins over the fallback
+    cycle; clearing hands control back."""
+    cfg, tcfg, spb = _setup()
+    hook = SchedulerHookPolicy(cfg, spb, default=CyclePolicy(cfg, spb))
+    engine = SPBEngine(cfg, tcfg, spb, policy=hook)
+    engine.init_state(jax.random.key(0))
+    batch = make_batch(cfg, 4, 64)
+
+    snapped = hook.request_depth(1)
+    engine.train_step(batch, 0)
+    assert engine.last_depth == snapped == 1
+
+    # paper-style fractional request: worker j of k backprops (j+1)/k
+    L = total_layers(cfg)
+    for j, k in ((0, 4), (1, 4), (3, 4)):
+        want = snap_depth(cfg, max(1, -(-((j + 1) * L) // k)))
+        assert hook.request_fraction((j + 1) / k) == want
+
+    hook.clear()
+    sched = spb_lib.make_schedule(cfg, spb)
+    engine.train_step(batch, 7)
+    assert engine.last_depth == sched.depth_at(7)
+
+
+def test_hook_requests_full_backprop():
+    cfg, _, spb = _setup()
+    hook = SchedulerHookPolicy(cfg, spb, default=CyclePolicy(cfg, spb))
+    hook.request_depth(None)
+    assert hook.depth_for_step(0) is None      # explicit full backprop
+
+
+def test_costmodel_policy_respects_budget():
+    """time(frac) = fwd + frac*bwd (paper Table 1 linear scaling): with a
+    tight budget only the affordable depths survive, plus the deepest so
+    every layer keeps training."""
+    cfg, _, spb = _setup()
+    prof = ModelProfile(name="toy", fwd_s=1.0, bwd_s=3.0, mem_fwd_gb=1,
+                        mem_peak_gb=2, model_size_gb=1, grad_gb=1)
+    L = total_layers(cfg)
+    policy = CostModelPolicy(cfg, spb, prof, time_budget_frac=0.5)
+    budget = 0.5 * prof.task_time(1.0)
+    for d in policy.depths[:-1]:
+        assert prof.task_time(d / L) <= budget
+    assert max(policy.depths) == max(spb_lib.snapped_depths(cfg, spb))
+    emitted = {policy.depth_for_step(s) for s in range(10)}
+    assert emitted <= set(policy.depths)
+
+    # generous budget: the whole snapped cycle survives
+    policy_all = CostModelPolicy(cfg, spb, prof, time_budget_frac=1.0)
+    assert set(policy_all.depths) == set(spb_lib.snapped_depths(cfg, spb))
+
+    with pytest.raises(ValueError):
+        CostModelPolicy(cfg, spb, prof, time_budget_frac=0.0)
+
+
+def test_make_policy_factory():
+    cfg, _, spb = _setup()
+    assert isinstance(make_policy("cycle", cfg, spb), CyclePolicy)
+    assert isinstance(make_policy("hook", cfg, spb), SchedulerHookPolicy)
+    assert isinstance(make_policy("costmodel", cfg, spb), CostModelPolicy)
+    off = make_policy("cycle", cfg, SPBConfig(mode="off"))
+    assert off.depth_for_step(0) is None
+    with pytest.raises(ValueError):
+        make_policy("nope", cfg, spb)

@@ -106,13 +106,15 @@ def test_spb_shallow_step_has_fewer_backward_flops_and_bytes():
 
 
 def test_spb_step_table_covers_schedule():
-    """Every depth the temporal schedule can emit has a jitted step —
-    guards the train-loop dispatch (missing depths are a hard error)."""
-    from repro.dist import steps as steps_lib
+    """Every depth the temporal schedule can emit has a step-table entry —
+    guards the engine's depth dispatch (missing depths would silently
+    erase the SPB savings)."""
+    from repro.engine import SPBEngine
     cfg = reduced_config("gemma3-4b")       # patterned: depths snap
     spb = SPBConfig(mode="temporal", k=4)
-    tcfg = TrainConfig()
-    table = steps_lib.build_spb_train_steps(cfg, tcfg, spb)
+    engine = SPBEngine(cfg, TrainConfig(), spb)
+    keys = set(engine.depth_keys())
     sched = spb_lib.make_schedule(cfg, spb)
     for step in range(2 * spb.k + 3):
-        assert sched.depth_at(step) in table
+        assert engine.depth_key_for_step(step) in keys
+        assert sched.depth_at(step) in keys

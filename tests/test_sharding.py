@@ -1,0 +1,95 @@
+"""ZeRO-1 optimizer-state sharding: the DP shard dim must be the LARGEST
+divisible not-yet-sharded dim (not the first), locked here so the choice
+cannot silently regress."""
+import types
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import TrainConfig
+from repro.configs import reduced_config
+from repro.dist import sharding as shd
+from repro.dist import steps as steps_lib
+
+
+def _mesh(shape=(4, 1), axes=("data", "model")):
+    """Spec derivation is pure — a stub with axis_names/devices suffices,
+    so the test does not need 4 real devices."""
+    return types.SimpleNamespace(axis_names=axes, devices=np.empty(shape))
+
+
+def test_zero1_prefers_largest_divisible_dim():
+    mesh = _mesh()
+    # both dims divisible by dp=4: dim1 (256) wins over dim0 (8)
+    assert shd.zero1_spec(P(), (8, 256), mesh) == P(None, "data")
+    # first-dim-only divisibility still works
+    assert shd.zero1_spec(P(), (8, 3), mesh) == P("data")
+    # tie broken by first occurrence of the max
+    assert shd.zero1_spec(P(), (64, 64), mesh) == P("data")
+
+
+def test_zero1_respects_existing_axes():
+    mesh = _mesh()
+    # dim0 already on 'model': dp goes to the largest FREE dim
+    assert shd.zero1_spec(P("model", None), (512, 64), mesh) == \
+        P("model", "data")
+    # dp axis already used somewhere: leave the spec alone
+    assert shd.zero1_spec(P("data", None), (8, 256), mesh) == \
+        P("data", None)
+    # nothing divisible: unchanged
+    assert shd.zero1_spec(P(), (3, 5), mesh) == P()
+    # no dp axes in the mesh at all: unchanged
+    assert shd.zero1_spec(P(), (8, 256), _mesh((4,), ("model",))) == P()
+
+
+def test_zero1_multi_pod_axes():
+    mesh = _mesh((2, 2, 1), ("pod", "data", "model"))     # dp = 4
+    assert shd.zero1_spec(P(), (4, 64), mesh) == P(None, ("pod", "data"))
+
+
+def test_state_pspec_zero1_locked_specs():
+    """Lock the chosen specs for the reduced yi-6b AdamW state: every
+    ZeRO-1-sharded leaf uses its largest divisible free dim."""
+    cfg = reduced_config("yi-6b")          # d_model=64, q_dim=64, vocab 512
+    tcfg = TrainConfig(optimizer="adamw")
+    shapes = steps_lib.train_state_shapes(cfg, tcfg)
+    mesh = _mesh()
+    specs = shd.state_pspec(shapes, mesh=mesh, zero1=True)
+
+    # embedding moments: (padded_vocab=512, d_model=64) with dim0 already
+    # on 'model' -> dp lands on d_model
+    assert specs["opt"]["mu"]["embed"]["tok"] == P("model", "data")
+    # attention wq moments: stacked (count=4, d_model=64, q_dim=64), last
+    # dim on 'model' -> dp picks d_model (64 > count=4)
+    assert specs["opt"]["mu"]["groups"][0][0]["mixer"]["wq"] == \
+        P(None, "data", "model")
+    # params themselves are never ZeRO-sharded
+    assert specs["params"]["groups"][0][0]["mixer"]["wq"] == \
+        P(None, None, "model")
+    assert specs["step"] == P()
+
+    # invariant over every opt leaf: if dp was added, it sits on the
+    # largest divisible dim that the base spec left free
+    dp_size = 4
+    base = {k: shd.params_pspec(v, mesh=mesh)
+            for k, v in shapes["opt"].items()}
+
+    def check(bspec, zspec, leaf):
+        b = list(bspec) + [None] * (len(leaf.shape) - len(bspec))
+        z = list(zspec) + [None] * (len(leaf.shape) - len(zspec))
+        added = [i for i, (x, y) in enumerate(zip(b, z)) if x != y]
+        if not added:
+            return
+        (i,) = added
+        assert z[i] == "data"
+        free_divisible = [leaf.shape[j] for j, e in enumerate(b)
+                          if e is None and leaf.shape[j] % dp_size == 0
+                          and leaf.shape[j] >= dp_size]
+        assert leaf.shape[i] == max(free_divisible)
+
+    for key in shapes["opt"]:
+        jax.tree.map(
+            lambda b, z, l: check(b, z, l), base[key],
+            specs["opt"][key], shapes["opt"][key],
+            is_leaf=lambda x: isinstance(x, P))

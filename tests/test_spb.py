@@ -111,6 +111,39 @@ def test_rebalance_moves_deep_off_slow():
     assert sorted(re.order) == [0, 1, 2, 3]
 
 
+def test_rebalance_preserves_warmup_and_cycle_coverage():
+    """Rebalancing is a permutation of the cycle: warmup still forces max
+    depth, every depth still appears exactly once per cycle, and the
+    expensive levels sit on the fast positions."""
+    sched = spb_lib.TemporalSchedule((1, 2, 3, 4), warmup_steps=3)
+    re = sched.rebalance([1, 2])
+    assert re.warmup_steps == 3
+    for s in range(3):                      # warmup unaffected
+        assert re.depth_at(s) == 4
+    cyc = [re.depth_at(3 + i) for i in range(re.k)]
+    assert sorted(cyc) == [1, 2, 3, 4]      # still a full cycle
+    # deepest two levels occupy the non-slow positions {0, 3}
+    assert {cyc[0], cyc[3]} == {3, 4}
+    assert {cyc[1], cyc[2]} == {1, 2}
+
+
+def test_rebalance_all_slow_is_stable():
+    """Every position slow: rebalance degenerates gracefully (any
+    assignment is as good as any other — coverage must survive)."""
+    sched = spb_lib.TemporalSchedule((1, 2, 3, 4))
+    re = sched.rebalance([0, 1, 2, 3])
+    assert sorted(re.depths[i] for i in re.order) == [1, 2, 3, 4]
+
+
+def test_warmup_boundary_transition():
+    """depth_at is max-depth through step warmup-1, then enters the cycle
+    at cycle position 0 exactly at step == warmup."""
+    sched = spb_lib.TemporalSchedule((1, 2, 3, 4), warmup_steps=5)
+    assert sched.depth_at(4) == 4
+    assert sched.depth_at(5) == sched.depths[sched.order[0]]
+    assert sched.depth_at(5 + sched.k) == sched.depth_at(5)  # periodic
+
+
 def test_estimator_variance_harmonic():
     """Lemma 7.3: SPB estimator variance across blocks follows k/(i*B);
     summing gives the ~log k inflation over full mini-batch SGD."""

@@ -4,13 +4,10 @@ tokens, sharding specs resolve."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from repro.config import SPBConfig, TrainConfig
-from repro.configs import make_batch, reduced_config
-from repro.core import spb as spb_lib
+from repro.configs import reduced_config
 from repro.data.pipeline import Pipeline
-from repro.dist import steps as steps_lib
+from repro.engine import SPBEngine
 
 
 def _train(arch, steps, spb_mode="off", k=4, seed=0, lr=3e-3, batch=8,
@@ -18,19 +15,11 @@ def _train(arch, steps, spb_mode="off", k=4, seed=0, lr=3e-3, batch=8,
     cfg = reduced_config(arch)
     tcfg = TrainConfig(optimizer="adamw", learning_rate=lr, num_steps=steps,
                        warmup_steps=5)
-    spb = SPBConfig(mode=spb_mode, k=k)
-    fns = {d: jax.jit(f) for d, f in
-           steps_lib.build_spb_train_steps(cfg, tcfg, spb).items()}
-    sched = spb_lib.make_schedule(cfg, spb) if spb_mode == "temporal" else None
-    state = steps_lib.init_train_state(jax.random.key(seed), cfg, tcfg)
+    engine = SPBEngine(cfg, tcfg, SPBConfig(mode=spb_mode, k=k))
+    engine.init_state(jax.random.key(seed))
     pipe = Pipeline(cfg, batch, seq, seed=seed)
-    losses = []
-    for step in range(steps):
-        d = sched.depth_at(step) if sched else None
-        fn = fns.get(d, fns[None])
-        state, metrics = fn(state, pipe.get_batch(step))
-        losses.append(float(metrics["xent"]))
-    return losses
+    return [float(engine.train_step(pipe.get_batch(step), step)["xent"])
+            for step in range(steps)]
 
 
 def test_training_reduces_loss():
