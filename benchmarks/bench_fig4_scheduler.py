@@ -8,13 +8,18 @@ Jigsaw WITHOUT SPB to isolate scheduler vs technique.
 """
 from __future__ import annotations
 
+import json
+import platform
 import statistics
+from pathlib import Path
 from typing import Dict, List
 
 from repro.jigsaw.costmodel import profile_db, v100_profiles
 from repro.jigsaw.schedulers import ALL_SCHEDULERS, JigsawScheduler
 from repro.jigsaw.simulator import simulate
 from repro.jigsaw.trace import generate_trace
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_fig4_scheduler.json"
 
 
 def bench(num_jobs: int = 150, machines: int = 45, seed: int = 1,
@@ -54,9 +59,35 @@ def bench(num_jobs: int = 150, machines: int = 45, seed: int = 1,
     return results
 
 
+def write_json(res: Dict[str, dict], *, num_jobs: int, machines: int,
+               seed: int, mean_arrival: float, quick: bool,
+               path: Path = OUT) -> Path:
+    """Machine-readable perf trajectory alongside the printed table, like
+    BENCH_spb_step.json: makespan + utilization (+ JCT/migration
+    percentiles) per scheduler, and Jigsaw's makespan improvement over
+    each baseline."""
+    base = res["jigsaw"]["makespan"]
+    rec = {
+        "num_jobs": num_jobs, "machines": machines, "seed": seed,
+        "mean_arrival_s": mean_arrival, "quick": quick,
+        "platform": platform.platform(),
+        "schedulers": res,
+        "jigsaw_improvement_pct": {
+            b: round(100 * (1 - base / res[b]["makespan"]), 2)
+            for b in ("tiresias", "gandiva", "fifo")},
+    }
+    path.write_text(json.dumps(rec, indent=2) + "\n")
+    return path
+
+
 def run(quick: bool = True):
-    res = bench(num_jobs=80 if quick else 250,
-                mean_arrival=2.0 if quick else 1.5)
+    num_jobs = 80 if quick else 250
+    mean_arrival = 2.0 if quick else 1.5
+    machines, seed = 45, 1
+    res = bench(num_jobs=num_jobs, machines=machines, seed=seed,
+                mean_arrival=mean_arrival)
+    write_json(res, num_jobs=num_jobs, machines=machines, seed=seed,
+               mean_arrival=mean_arrival, quick=quick)
     out = []
     base = res["jigsaw"]["makespan"]
     for name, r in res.items():

@@ -1,118 +1,94 @@
-"""End-to-end cluster-style training driver (deliverable b).
+"""Multi-job SPB cluster training: JigSaw schedules real train steps.
 
-Trains a ~100M-parameter llama-style model on the host mesh by driving
-``repro.engine.SPBEngine`` directly — the same session API the trainer,
-dry-run and benchmarks use — with the production feature set on: SPB
-temporal schedule behind a *scheduler hook*, checkpointing + resume,
-deterministic shard-aware data pipeline, mixed-precision optimizer.
+Two (or more) tenant jobs share one accelerator pool.  A
+``JigsawScheduler`` decides which job iterates next, on which machine
+slot, at what SPB backprop depth — and every decision is enacted by
+``repro.cluster.LiveBackend`` as a real jitted ``SPBEngine.train_step``
+(one engine per job, shared host mesh, worker j of k backprops (j+1)/k
+of the layers via ``SchedulerHookPolicy``).  Measured step times feed
+back into the scheduler's ``WorkerSpec`` cost model.
 
-The depth policy is the JigSaw bridge: a JobSpec-level controller watches
-per-iteration wall-clock and, when the job runs over its time budget
-(e.g. a co-scheduled tenant steals cycles), requests a shallower backprop
-depth for the next iterations via ``SchedulerHookPolicy`` — the paper's
-scheduler-controlled cost knob acting on real execution.  On a real TPU
-fleet the same driver runs with ``make_production_mesh()``.
+The session first runs through ``SimBackend`` — the same runtime, same
+scheduler, virtual clock only — to show the DES *prediction* for the
+session, then runs it live and compares predicted vs measured makespan:
+the sim-to-real bridge in one screen of output.
 
-  PYTHONPATH=src python examples/train_spb_cluster.py [--steps 300]
+  PYTHONPATH=src python examples/train_spb_cluster.py [--jobs 2]
+                 [--iters 4] [--machines 2] [--scheduler jigsaw]
 """
 import argparse
 import time
 
-import jax
-
-from repro.checkpoint.manager import CheckpointManager
+from repro.cluster import ClusterRuntime, LiveBackend, make_live_job
 from repro.config import SPBConfig, TrainConfig
-from repro.data.pipeline import Pipeline
-from repro.engine import CyclePolicy, SPBEngine, SchedulerHookPolicy
+from repro.configs import reduced_config
+from repro.jigsaw.schedulers import ALL_SCHEDULERS
 
 
-class TimeBudgetController:
-    """Stand-in for a JobSpec-level cluster scheduler: keeps the job under
-    ``budget_s`` per iteration by shrinking the next iteration's backprop
-    fraction; hands control back to the cycle schedule when healthy."""
-
-    def __init__(self, hook: SchedulerHookPolicy, budget_s: float):
-        self.hook = hook
-        self.budget_s = budget_s
-        self.ema = None
-
-    def after_step(self, step_time_s: float) -> None:
-        self.ema = (step_time_s if self.ema is None
-                    else 0.7 * self.ema + 0.3 * step_time_s)
-        if self.ema > self.budget_s:
-            self.hook.request_fraction(0.5)     # halve the backprop bill
-        else:
-            self.hook.clear()                   # back to the k-cycle
+def build_jobs(args):
+    """Tenants with different worker counts, so the scheduler has real
+    SPB asymmetry to pack: job i gets 2 + (i % 2) workers."""
+    jobs = []
+    for i in range(args.jobs):
+        k = min(2 + (i % 2), args.machines)
+        cfg = reduced_config(args.arch)
+        jobs.append(make_live_job(
+            i, arrival=i * args.arrival, cfg=cfg, iterations=args.iters,
+            num_workers=k, batch=args.batch, seq=args.seq,
+            est_step_s=args.est_step, model_size_gb=0.01,
+            tcfg=TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                             num_steps=args.iters * k, seed=i),
+            spb=SPBConfig(mode="temporal", k=k)))
+    return jobs
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--ckpt", default="/tmp/repro_spb_100m")
-    ap.add_argument("--budget-ms", type=float, default=0.0,
-                    help="per-iteration time budget for the scheduler "
-                         "hook (0 = derive from warmup steps)")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=4)
+    ap.add_argument("--machines", type=int, default=2)
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--scheduler", default="jigsaw",
+                    choices=sorted(ALL_SCHEDULERS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--arrival", type=float, default=0.5)
+    ap.add_argument("--est-step", type=float, default=0.5)
     args = ap.parse_args()
 
-    # ~100M params: 12 layers x d_model 640 x vocab 8192 llama-style.
-    # We reuse yi-6b's family (GQA + SwiGLU) via config overrides.
-    import repro.configs.yi_6b as yi
-    cfg = yi.CONFIG.scaled(
-        name="llama-100m", d_model=640, num_layers=12, vocab_size=8192,
-        num_heads=10, num_kv_heads=2, head_dim=64, d_ff=1792,
-        dtype="float32", attn_q_block=128, attn_kv_block=128)
+    run_kw = dict(num_machines=args.machines, machine_mem_gb=16.0,
+                  gamma=0.1, horizon=60.0, record_schedule=True)
 
-    tcfg = TrainConfig(learning_rate=3e-4, optimizer="adamw",
-                       num_steps=args.steps, checkpoint_every=50,
-                       checkpoint_dir=args.ckpt, seed=0)
-    spb = SPBConfig(mode="temporal", k=4, warmup_steps=20)
-    hook = SchedulerHookPolicy(cfg, spb, default=CyclePolicy(cfg, spb))
-    engine = SPBEngine(cfg, tcfg, spb, policy=hook)
-    engine.init_state(jax.random.key(tcfg.seed))
+    # 1) DES prediction: same runtime + scheduler, virtual clock only.
+    predicted = ClusterRuntime(
+        [lj.spec for lj in build_jobs(args)],
+        ALL_SCHEDULERS[args.scheduler](), **run_kw).run()
+    print(f"[sim ] predicted makespan={predicted.makespan:.2f}s "
+          f"util={predicted.util:.3f} "
+          f"migrations={sum(predicted.migrations.values())}", flush=True)
 
-    mgr = CheckpointManager(args.ckpt, keep=3)
-    start = 0
-    if mgr.latest_step() is not None:
-        state, start = mgr.restore(engine.state)
-        engine.attach_state(state)
-        print(f"[cluster] resumed from step {start}", flush=True)
+    # 2) Live: every placement runs as a real jitted step.
+    backend = LiveBackend(build_jobs(args), verbose=True)
+    runtime = ClusterRuntime(backend.specs(),
+                             ALL_SCHEDULERS[args.scheduler](),
+                             backend, **run_kw)
+    t0 = time.time()
+    live = runtime.run()
+    wall = time.time() - t0
 
-    pipe = Pipeline(cfg, args.batch, args.seq, seed=tcfg.seed)
-    controller = None
-    warmup_times = []
-    t_run = time.time()
-    for step in range(start, tcfg.num_steps):
-        t0 = time.perf_counter()
-        metrics = engine.train_step(pipe.get_batch(step), step)
-        jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
-
-        if controller is None:
-            # the first step of a (possibly resumed) process pays jit
-            # compile — never let it into the budget baseline
-            if step > start:
-                warmup_times.append(dt)
-            if len(warmup_times) >= 3 and step >= spb.warmup_steps:
-                # max, not min: after a resume past warmup the baseline
-                # steps are mixed-depth cycle steps, and the budget must
-                # accommodate a healthy full-depth step
-                budget = (args.budget_ms / 1e3 if args.budget_ms
-                          else 1.5 * max(warmup_times))
-                controller = TimeBudgetController(hook, budget)
-                print(f"[cluster] scheduler hook armed: "
-                      f"budget={budget*1e3:.0f}ms/iter", flush=True)
-        else:
-            controller.after_step(dt)
-
-        if step % 10 == 0 or step == tcfg.num_steps - 1:
-            print(f"[cluster] step={step:4d} depth={engine.last_depth!s:>4} "
-                  f"xent={float(metrics['xent']):.4f} "
-                  f"{dt*1e3:.0f}ms ({time.time()-t_run:.1f}s)", flush=True)
-        if (step + 1) % tcfg.checkpoint_every == 0:
-            mgr.save(jax.device_get(engine.state), step + 1)
-    mgr.wait()
+    print(f"\n[live] measured makespan={live.makespan:.2f}s "
+          f"(predicted {predicted.makespan:.2f}s) util={live.util:.3f} "
+          f"wall={wall:.1f}s", flush=True)
+    for jid, s in sorted(backend.summary().items()):
+        done = s["steps_run"] == s["iterations"] * s["workers"]
+        xent = (f"{s['final_xent']:.4f}" if s["final_xent"] is not None
+                else "n/a")
+        print(f"[live] job={jid} workers={s['workers']} "
+              f"steps={s['steps_run']}/{s['iterations'] * s['workers']} "
+              f"depths={s['depths']} xent={xent} "
+              f"{'done' if done else 'INCOMPLETE'}", flush=True)
+    assert len(live.jct) == args.jobs, "not all jobs completed"
+    backend.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""One event-loop runtime for cluster scheduling, sim and live.
+
+``ClusterRuntime`` (``runtime.py``) owns the clock, event heap, ready
+queue, dependency tracking and migration accounting that used to live
+inside ``jigsaw/simulator.py``; ``Scheduler.place()`` policies drive two
+interchangeable execution backends:
+
+* :class:`SimBackend` — the wall-clock-free DES (trace/bench behavior
+  preserved; ``repro.jigsaw.simulator.simulate`` is now a shim here).
+* :class:`LiveBackend` (``live.py``) — a pool of real ``SPBEngine``
+  sessions, one per :class:`JobSpec` on a shared host mesh; each placed
+  task runs as a real jitted train step at the worker's SPB depth and
+  the measured duration feeds back into the scheduler's cost model.
+
+``live`` imports jax; it is loaded lazily so pure-DES consumers
+(schedulers, trace benchmarks) stay jax-free.
+"""
+from repro.cluster.runtime import (  # noqa: F401
+    Assignment, ClusterRuntime, ClusterState, ExecutionBackend, JobSpec,
+    Scheduler, SimBackend, SimResult, Task, WorkerSpec)
+
+_LIVE = ("LiveBackend", "LiveJob", "make_live_job")
+
+__all__ = [
+    "Assignment", "ClusterRuntime", "ClusterState", "ExecutionBackend",
+    "JobSpec", "Scheduler", "SimBackend", "SimResult", "Task", "WorkerSpec",
+    *_LIVE,
+]
+
+
+def __getattr__(name):
+    if name in _LIVE:
+        from repro.cluster import live
+        return getattr(live, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

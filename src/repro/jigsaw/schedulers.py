@@ -8,6 +8,7 @@ they cannot exploit SPB's variable per-worker work — the paper's point).
 """
 from __future__ import annotations
 
+from bisect import insort
 from collections import defaultdict
 from typing import Dict, List, Tuple
 
@@ -23,34 +24,70 @@ class JigsawScheduler(Scheduler):
     where the task can *start earliest*, accounting for the
     gamma*model_size migration penalty when the worker last ran elsewhere —
     which naturally yields machine affinity (paper §3.2).
+
+    The priority order is maintained *incrementally* across ``place()``
+    calls (the ROADMAP >10k-task note): a task's ``duration * memory``
+    product never changes while it waits, and the per-call normalization
+    constants ``1/(maxd*maxm)`` scale every key equally, so the induced
+    order is static.  New ready tasks are insorted once on first sight;
+    tasks that left the ready queue are lazily skipped and periodically
+    compacted — instead of a full re-sort (with Python-level key lambdas)
+    of the whole ready queue every scheduling round.  Ties break by
+    insertion sequence, which equals ready-queue order (the runtime only
+    appends and order-preservingly filters) — the old stable sort's order
+    for identical tasks.  Placement output is byte-identical on the
+    repo's traces and fig4 benchmark workloads
+    (tests/test_scheduler.py pins this against a reference re-sort); the
+    one divergence class is *distinct* tasks whose exact
+    ``duration*memory`` products tie: the old per-call normalized key
+    could separate them by last-ulp float noise, whereas this index
+    breaks the tie deterministically by arrival order.
     """
     name = "jigsaw"
 
+    def __init__(self):
+        self._seq = 0
+        self._known: set = set()            # id(task) of indexed tasks
+        self._order: List[tuple] = []       # sorted (-dur*mem, seq, task)
+
     def place(self, tasks: List[Task], state: ClusterState, now: float,
               jobs: Dict[int, JobSpec], gamma: float) -> List[Assignment]:
+        live = set(map(id, tasks))
+        known = self._known
+        for t in tasks:
+            if id(t) not in known:
+                known.add(id(t))
+                insort(self._order, (-(t.duration * t.memory),
+                                     self._seq, t))
+                self._seq += 1
         out = []
         free = list(state.machine_free_at)
-        maxd = max((t.duration for t in tasks), default=1.0) or 1.0
-        maxm = max((t.memory for t in tasks), default=1.0) or 1.0
-        order = sorted(
-            tasks,
-            key=lambda t: -(t.duration / maxd) * (t.memory / maxm))
-        for t in order:
-            if t.memory > state.machine_mem_gb:
+        mem_cap = state.machine_mem_gb
+        n_mach = state.num_machines
+        stale = 0
+        for _prio, _seq, t in self._order:
+            if id(t) not in live:
+                stale += 1              # departed; dropped at compaction
                 continue
-            key = (t.job_id, t.worker_id)
-            prev = state.last_machine.get(key)
+            if t.memory > mem_cap:
+                continue    # memory-infeasible on every machine this round
+            prev = state.last_machine.get((t.job_id, t.worker_id))
+            penalty = gamma * jobs[t.job_id].model_size_gb
+            floor = t.ready_time if t.ready_time > now else now
             best_m, best_start = None, float("inf")
-            for m in range(state.num_machines):
-                start = max(free[m], t.ready_time, now)
+            for m in range(n_mach):
+                start = free[m] if free[m] > floor else floor
                 if prev is not None and prev != m:
-                    start += gamma * jobs[t.job_id].model_size_gb
+                    start += penalty
                 if start < best_start - 1e-12:
                     best_start, best_m = start, m
             if best_m is None:
                 continue
             out.append(Assignment(t, best_m, best_start))
             free[best_m] = best_start + t.duration
+        if stale * 2 > len(self._order):
+            self._order = [e for e in self._order if id(e[2]) in live]
+            self._known = set(map(id, (e[2] for e in self._order)))
         return out
 
 

@@ -1,99 +1,27 @@
-"""Discrete-event cluster simulator for DLT scheduling (paper §3/§4.2).
+"""Discrete-event cluster simulator — now a shim over ``repro.cluster``.
 
-Entities mirror the paper: a *job* is a set of parallel workers iterating
-synchronously; a *task* is one worker's work for one iteration (its
-duration/memory depend on the worker's SPB backprop fraction); *machines*
-run one task at a time and moving a worker to a new machine costs
-``gamma * model_size`` (model transfer), which schedulers must account
-for.  Synchronous SGD dependency: iteration i+1 tasks become ready only
-when ALL of iteration i's tasks for that job finished.
-
-The engine is policy-agnostic: schedulers implement ``place(...)`` and the
-engine validates machine exclusivity and dependencies (tests assert the
-invariants).
+The event loop, clock, and machine/ready-queue bookkeeping moved to
+``repro.cluster.runtime`` (PR 3): the same :class:`ClusterRuntime` that
+runs this DES backend also drives a live multi-job ``SPBEngine`` pool
+(``repro.cluster.live.LiveBackend``), so ``Scheduler.place()`` policies
+are backend-agnostic.  This module keeps the historical import path and
+the one-call :func:`simulate` entry point; all entities are re-exported
+unchanged and the DES behavior (event ordering, horizon semantics,
+migration accounting) is identical.
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List
 
+from repro.cluster.runtime import (  # noqa: F401  (re-exported API)
+    Assignment, ClusterRuntime, ClusterState, ExecutionBackend, JobSpec,
+    Scheduler, SimBackend, SimResult, Task, WorkerSpec)
 
-@dataclass
-class WorkerSpec:
-    """Static per-worker costs (seconds / GB)."""
-    duration: float              # one iteration of this worker's task
-    memory: float                # peak GB while running
-
-
-@dataclass
-class JobSpec:
-    job_id: int
-    arrival: float
-    model: str
-    model_size_gb: float
-    iterations: int
-    workers: List[WorkerSpec]
-
-    @property
-    def num_workers(self) -> int:
-        return len(self.workers)
-
-
-@dataclass(eq=False)
-class Task:
-    """eq=False: tasks are identity-keyed.  Two workers of one job can
-    have identical field values, and value-equality removal from the ready
-    queue would alias them (and cost a linear scan per placement)."""
-    job_id: int
-    worker_id: int
-    iteration: int
-    duration: float
-    memory: float
-    ready_time: float            # prev iteration finished
-
-
-@dataclass
-class Assignment:
-    task: Task
-    machine: int
-    start: float
-
-
-@dataclass
-class ClusterState:
-    num_machines: int
-    machine_mem_gb: float
-    machine_free_at: List[float]
-    # worker (job, wid) -> machine it last ran on (affinity / migration)
-    last_machine: Dict[Tuple[int, int], int]
-
-
-class Scheduler:
-    """Interface: given ready tasks and cluster state, assign them."""
-    name = "base"
-
-    def place(self, tasks: List[Task], state: ClusterState, now: float,
-              jobs: Dict[int, JobSpec], gamma: float) -> List[Assignment]:
-        raise NotImplementedError
-
-
-@dataclass
-class SimResult:
-    makespan: float
-    jct: Dict[int, float]                  # job -> completion - arrival
-    migrations: Dict[int, int]             # job -> total worker migrations
-    total_iterations: Dict[int, int]
-    machine_busy: float                    # total busy machine-seconds
-    util: float                            # busy / (makespan * machines)
-    # optional full schedule: (machine, start, end, job, worker, iteration)
-    schedule: List[Tuple[int, float, float, int, int, int]] = field(
-        default_factory=list)
-
-    def migration_fraction(self, job_id: int) -> float:
-        it = self.total_iterations[job_id]
-        w = max(1, it)
-        return self.migrations[job_id] / w
+__all__ = [
+    "Assignment", "ClusterRuntime", "ClusterState", "ExecutionBackend",
+    "JobSpec", "Scheduler", "SimBackend", "SimResult", "Task", "WorkerSpec",
+    "simulate",
+]
 
 
 def simulate(jobs: List[JobSpec], scheduler: Scheduler, *,
@@ -101,120 +29,8 @@ def simulate(jobs: List[JobSpec], scheduler: Scheduler, *,
              gamma: float = 2.0, max_time: float = 10e6,
              horizon: float = 60.0, record_schedule: bool = False
              ) -> SimResult:
-    """Run the DES to completion.  gamma: seconds/GB model-transfer cost.
-
-    ``horizon`` is the paper's scheduling interval T: only assignments
-    starting within now+horizon are committed; everything else stays in
-    the ready queue and is re-prioritized at the next decision point (this
-    is what lets LAS/packing orders actually matter)."""
-    jobs_by_id = {j.job_id: j for j in jobs}
-    for j in jobs:      # fail fast on unplaceable jobs (would livelock)
-        if j.num_workers > num_machines:
-            raise ValueError(f"job {j.job_id} needs {j.num_workers} workers "
-                             f"> {num_machines} machines")
-        if any(w.memory > machine_mem_gb for w in j.workers):
-            raise ValueError(f"job {j.job_id} worker exceeds machine memory")
-    state = ClusterState(num_machines, machine_mem_gb,
-                         [0.0] * num_machines, {})
-
-    # per-job progress
-    remaining: Dict[int, int] = {}         # unfinished tasks in current iter
-    cur_iter: Dict[int, int] = {j.job_id: 0 for j in jobs}
-    done_jobs: Dict[int, float] = {}
-    migrations = {j.job_id: 0 for j in jobs}
-    total_it = {j.job_id: j.iterations * j.num_workers for j in jobs}
-    busy = 0.0
-
-    ready: List[Task] = []
-    # event heap: (time, seq, kind, payload)
-    events: List[Tuple[float, int, str, object]] = []
-    seq = 0
-    for j in jobs:
-        heapq.heappush(events, (j.arrival, seq, "arrival", j.job_id)); seq += 1
-
-    def spawn_iteration(job: JobSpec, it: int, t: float):
-        nonlocal seq
-        remaining[job.job_id] = job.num_workers
-        for wid, w in enumerate(job.workers):
-            ready.append(Task(job.job_id, wid, it, w.duration, w.memory, t))
-
-    schedule_log: List[Tuple[int, float, float, int, int, int]] = []
-    now = 0.0
-    fruitless = 0
-    while events or ready:
-        if events:
-            now, _, kind, payload = heapq.heappop(events)
-            if now > max_time:
-                break
-            if kind == "arrival":
-                spawn_iteration(jobs_by_id[payload], 0, now)
-            elif kind == "task_done":
-                task, machine = payload
-                jid = task.job_id
-                remaining[jid] -= 1
-                if remaining[jid] == 0:
-                    job = jobs_by_id[jid]
-                    nxt = cur_iter[jid] + 1
-                    cur_iter[jid] = nxt
-                    if nxt >= job.iterations:
-                        done_jobs[jid] = now
-                    else:
-                        spawn_iteration(job, nxt, now)
-        # ask the policy to place whatever is ready
-        accepted_any = False
-        accepted_ids: set = set()
-        if ready:
-            placed = scheduler.place(ready, state, now, jobs_by_id, gamma)
-            for a in placed:
-                t = a.task
-                if id(t) in accepted_ids:
-                    continue            # policy returned the task twice
-                key = (t.job_id, t.worker_id)
-                prev = state.last_machine.get(key)
-                mig = prev is not None and prev != a.machine
-                start = max(a.start, now, state.machine_free_at[a.machine],
-                            t.ready_time)
-                if mig:
-                    start += gamma * jobs_by_id[t.job_id].model_size_gb
-                if start > now + horizon:
-                    continue            # outside the planning interval
-                accepted_ids.add(id(t))
-                if mig:
-                    migrations[t.job_id] += 1
-                end = start + t.duration
-                state.machine_free_at[a.machine] = end
-                state.last_machine[key] = a.machine
-                busy += t.duration
-                if record_schedule:
-                    schedule_log.append((a.machine, start, end, t.job_id,
-                                         t.worker_id, t.iteration))
-                heapq.heappush(events, (end, seq, "task_done",
-                                        (t, a.machine)))
-                seq += 1
-                accepted_any = True
-        if accepted_ids:
-            # one identity-keyed sweep instead of a value-equality linear
-            # scan per placed task (O(n) per round, not O(n^2))
-            ready[:] = [t for t in ready if id(t) not in accepted_ids]
-        if accepted_any:
-            fruitless = 0
-        if ready and not accepted_any and not events:
-            # nothing commits inside the horizon and no future event will
-            # re-trigger scheduling: tick at the next machine-free time
-            fruitless += 1
-            if fruitless > 1000:
-                break               # livelock guard (unsatisfiable tasks)
-            nxt = min(state.machine_free_at)
-            heapq.heappush(events, (max(nxt, now + horizon), seq, "tick",
-                                    None))
-            seq += 1
-        if not ready and not events:
-            break
-
-    makespan = max(done_jobs.values()) if done_jobs else now
-    jct = {jid: done_jobs[jid] - jobs_by_id[jid].arrival
-           for jid in done_jobs}
-    util = busy / (makespan * num_machines) if makespan > 0 else 0.0
-    return SimResult(makespan, jct, migrations,
-                     {j.job_id: j.iterations for j in jobs}, busy, util,
-                     schedule_log)
+    """Run the DES to completion (a ``ClusterRuntime`` + ``SimBackend``)."""
+    return ClusterRuntime(
+        jobs, scheduler, SimBackend(), num_machines=num_machines,
+        machine_mem_gb=machine_mem_gb, gamma=gamma, max_time=max_time,
+        horizon=horizon, record_schedule=record_schedule).run()

@@ -1,0 +1,214 @@
+"""Runtime invariants shared by BOTH execution backends (PR 3 tentpole):
+machine exclusivity, iteration i+1 gated on all of iteration i, migration
+penalty charged exactly once per move — asserted on the SAME schedule
+checker for SimBackend and LiveBackend — plus the live-only feedback
+loop: measured durations replace WorkerSpec estimates and change what
+subsequent ``place()`` calls see.
+"""
+import math
+
+import pytest
+
+from repro.cluster import (ClusterRuntime, ExecutionBackend, SimBackend,
+                           Scheduler)
+from repro.cluster.runtime import Assignment, JobSpec, WorkerSpec
+from repro.jigsaw.schedulers import JigsawScheduler
+from repro.jigsaw.costmodel import v100_profiles
+from repro.jigsaw.trace import generate_trace
+
+EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# The shared invariant checker (one suite, two backends)
+# ---------------------------------------------------------------------------
+
+def check_invariants(result, jobs, *, num_machines, gamma):
+    """The contract every ExecutionBackend must satisfy when driven by
+    the ClusterRuntime.  ``result`` must carry a recorded schedule."""
+    jobs_by_id = {j.job_id: j for j in jobs}
+    # (0) completion: every job finished every iteration
+    assert len(result.jct) == len(jobs)
+    assert len(result.schedule) == sum(
+        j.iterations * j.num_workers for j in jobs)
+    # (1) machine exclusivity: intervals on one machine never overlap
+    by_machine = {}
+    for m, s, e, jid, wid, it in result.schedule:
+        assert 0 <= m < num_machines
+        by_machine.setdefault(m, []).append((s, e))
+    for ivs in by_machine.values():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert s2 >= e1 - EPS
+    # (2) sync-SGD gating: iter i+1 starts after ALL of iter i finished
+    iter_end = {}
+    for m, s, e, jid, wid, it in result.schedule:
+        iter_end[(jid, it)] = max(iter_end.get((jid, it), 0.0), e)
+    for m, s, e, jid, wid, it in result.schedule:
+        if it > 0:
+            assert s >= iter_end[(jid, it - 1)] - EPS
+    # (3) migration accounting: the runtime's count equals the number of
+    # machine changes visible in the schedule (per job), so the penalty
+    # cannot be charged twice for one move or dropped
+    moves = {j.job_id: 0 for j in jobs}
+    last = {}
+    ordered = sorted(result.schedule, key=lambda r: (r[3], r[4], r[5]))
+    for m, s, e, jid, wid, it in ordered:
+        prev = last.get((jid, wid))
+        if prev is not None and prev != m:
+            moves[jid] += 1
+        last[(jid, wid)] = m
+    assert moves == result.migrations
+    # (4) work conservation: makespan >= busy time / machines
+    assert result.makespan >= result.machine_busy / num_machines - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Backend sessions (module-scoped: live compiles once)
+# ---------------------------------------------------------------------------
+
+SIM_MACHINES, SIM_GAMMA = 18, 2.0
+LIVE_MACHINES, LIVE_GAMMA = 2, 0.05
+
+
+@pytest.fixture(scope="module")
+def sim_session():
+    jobs = generate_trace(num_jobs=10, seed=4, db=v100_profiles(),
+                          mean_arrival_s=1.0, min_iters=5, max_iters=20,
+                          spb=True)
+    res = ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                         num_machines=SIM_MACHINES, gamma=SIM_GAMMA,
+                         horizon=5.0, record_schedule=True).run()
+    return res, jobs, SIM_MACHINES, SIM_GAMMA, None
+
+
+@pytest.fixture(scope="module")
+def live_session():
+    from repro.cluster.live import LiveBackend, make_live_job
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import reduced_config
+
+    cfg = reduced_config("yi-6b")
+    live_jobs = [
+        make_live_job(i, arrival=0.25 * i, cfg=cfg, iterations=2,
+                      num_workers=2, batch=2, seq=16, est_step_s=0.2,
+                      model_size_gb=0.01,
+                      tcfg=TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                                       num_steps=8, seed=i),
+                      spb=SPBConfig(mode="temporal", k=2))
+        for i in range(2)]
+    backend = LiveBackend(live_jobs)
+    res = ClusterRuntime(backend.specs(), JigsawScheduler(), backend,
+                         num_machines=LIVE_MACHINES, gamma=LIVE_GAMMA,
+                         horizon=120.0, record_schedule=True).run()
+    jobs = backend.specs()
+    return res, jobs, LIVE_MACHINES, LIVE_GAMMA, backend
+
+
+@pytest.fixture(params=["sim", "live"])
+def session(request, sim_session, live_session):
+    return sim_session if request.param == "sim" else live_session
+
+
+def test_backend_invariants(session):
+    """One shared suite: SimBackend and LiveBackend satisfy the same
+    scheduling invariants (acceptance criterion of PR 3)."""
+    res, jobs, machines, gamma, _ = session
+    check_invariants(res, jobs, num_machines=machines, gamma=gamma)
+
+
+def test_live_executes_real_steps_at_scheduled_depths(live_session):
+    """Every placed task ran as a real train step; the scheduler's
+    per-worker depth decisions were enacted (worker 0 of k=2 at depth
+    L/2, worker 1 at full depth) — distinct depths observed per job."""
+    res, jobs, _, _, backend = live_session
+    for job in jobs:
+        assert backend.steps_run[job.job_id] == \
+            job.iterations * job.num_workers
+        assert len(backend.observed_depths[job.job_id]) >= 2
+        assert math.isfinite(backend.last_xent[job.job_id])
+    # measured durations, not estimates, drove the virtual clock
+    for m, s, e, jid, wid, it in res.schedule:
+        assert e - s == pytest.approx(
+            backend.task_measured[(jid, wid, it)], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Migration penalty charged exactly once per move (deterministic scenario)
+# ---------------------------------------------------------------------------
+
+class _AlternatingScheduler(Scheduler):
+    """Deliberately bounces a single 1-worker job between two machines."""
+    name = "alternating"
+
+    def place(self, tasks, state, now, jobs, gamma):
+        return [Assignment(t, t.iteration % 2, now) for t in tasks]
+
+
+def test_migration_penalty_charged_exactly_once_per_move():
+    gamma, size, dur, iters = 2.0, 1.5, 1.0, 6
+    job = JobSpec(0, 0.0, "m", size, iters, [WorkerSpec(dur, 1.0)])
+    res = ClusterRuntime([job], _AlternatingScheduler(), SimBackend(),
+                         num_machines=2, gamma=gamma, horizon=1e9,
+                         record_schedule=True).run()
+    # every iteration after the first moves machines -> iters-1 moves,
+    # each exactly one gamma*model_size penalty in the makespan
+    assert res.migrations[0] == iters - 1
+    assert res.makespan == pytest.approx(
+        iters * dur + (iters - 1) * gamma * size)
+
+
+# ---------------------------------------------------------------------------
+# Live feedback: measurements displace estimates in later placements
+# ---------------------------------------------------------------------------
+
+class _ScriptedTimer:
+    """Deterministic perf_counter stand-in: each (t0, t1) pair yields the
+    next scripted duration."""
+
+    def __init__(self, durations):
+        self._durs = list(durations)
+        self._t = 0.0
+        self._mid = False
+
+    def __call__(self):
+        if self._mid:
+            self._t += self._durs.pop(0)
+        self._mid = not self._mid
+        return self._t
+
+
+def test_live_feedback_updates_subsequent_placements():
+    """Measured durations EMA into WorkerSpec.duration (after the compile
+    warmup run), so the Task estimates the scheduler prices for later
+    iterations track reality instead of the seed estimate."""
+    from repro.cluster.live import LiveBackend, make_live_job
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import reduced_config
+
+    est = 50.0          # wildly wrong seed estimate (seconds)
+    measured = [2.0, 1.0, 1.0, 1.0]     # iter0 (compile), iters 1-3
+    lj = make_live_job(0, arrival=0.0, cfg=reduced_config("yi-6b"),
+                       iterations=4, num_workers=1, batch=2, seq=16,
+                       est_step_s=est, model_size_gb=0.01,
+                       tcfg=TrainConfig(optimizer="adamw",
+                                        learning_rate=3e-3, num_steps=4,
+                                        seed=0),
+                       spb=SPBConfig(mode="temporal", k=2))
+    assert lj.spec.workers[0].duration == pytest.approx(est)
+    backend = LiveBackend([lj], ema=0.5, timer=_ScriptedTimer(measured))
+    ClusterRuntime(backend.specs(), JigsawScheduler(), backend,
+                   num_machines=1, gamma=0.0, horizon=1e9,
+                   record_schedule=True).run()
+    # iteration 0's task was priced at the seed estimate; its measurement
+    # (compile warmup) is excluded from the EMA, so iteration 1 still
+    # sees the estimate; from iteration 2 on, the EMA of real
+    # measurements has displaced it
+    assert backend.task_estimates[(0, 0, 0)] == pytest.approx(est)
+    assert backend.task_estimates[(0, 0, 1)] == pytest.approx(est)
+    e2 = 0.5 * est + 0.5 * measured[1]
+    assert backend.task_estimates[(0, 0, 2)] == pytest.approx(e2)
+    e3 = 0.5 * e2 + 0.5 * measured[2]
+    assert backend.task_estimates[(0, 0, 3)] == pytest.approx(e3)
+    assert lj.spec.workers[0].duration == pytest.approx(
+        0.5 * e3 + 0.5 * measured[3])

@@ -111,6 +111,69 @@ def test_jigsaw_exploits_spb_asymmetry():
     assert r_j.makespan < r_g.makespan
 
 
+class _SortedJigsawScheduler(JigsawScheduler):
+    """Reference implementation: the pre-incremental full re-sort of the
+    ready queue every call (normalized duration x memory key).  The
+    incremental index in JigsawScheduler must reproduce its placements
+    byte-for-byte."""
+
+    def place(self, tasks, state, now, jobs, gamma):
+        out = []
+        free = list(state.machine_free_at)
+        maxd = max((t.duration for t in tasks), default=1.0) or 1.0
+        maxm = max((t.memory for t in tasks), default=1.0) or 1.0
+        order = sorted(
+            tasks,
+            key=lambda t: -(t.duration / maxd) * (t.memory / maxm))
+        for t in order:
+            if t.memory > state.machine_mem_gb:
+                continue
+            key = (t.job_id, t.worker_id)
+            prev = state.last_machine.get(key)
+            best_m, best_start = None, float("inf")
+            for m in range(state.num_machines):
+                start = max(free[m], t.ready_time, now)
+                if prev is not None and prev != m:
+                    start += gamma * jobs[t.job_id].model_size_gb
+                if start < best_start - 1e-12:
+                    best_start, best_m = start, m
+            if best_m is None:
+                continue
+            from repro.jigsaw.simulator import Assignment
+            out.append(Assignment(t, best_m, best_start))
+            free[best_m] = best_start + t.duration
+        return out
+
+
+@pytest.mark.parametrize("seed,n,machines,arrival", [
+    (0, 20, MACHINES, 2.0),      # the suite's standard mini trace
+    (3, 40, MACHINES, 0.2),      # oversubscribed: deep ready queue
+    (7, 60, MACHINES, 0.5),      # larger trace, moderate contention
+])
+def test_jigsaw_incremental_index_is_byte_identical(seed, n, machines,
+                                                    arrival):
+    """The incremental priority index (satellite of PR 3) must not change
+    a single placement relative to the historical full re-sort: identical
+    schedule tuples (machine, start, end, job, worker, iteration),
+    makespan, JCTs and migration counts.
+
+    Scope: this pins the repo's traces (and the fig4 benchmark workload
+    via the larger parametrizations).  Distinct tasks whose exact
+    duration*memory products tie are allowed to reorder — the old
+    normalized key separated such pairs only by last-ulp float noise,
+    the index replaces that with a deterministic arrival-order
+    tie-break; no such pair occurs in these traces."""
+    kw = dict(num_machines=machines, horizon=5.0, record_schedule=True)
+    r_new = simulate(_mini_trace(n=n, seed=seed, arrival=arrival),
+                     JigsawScheduler(), **kw)
+    r_ref = simulate(_mini_trace(n=n, seed=seed, arrival=arrival),
+                     _SortedJigsawScheduler(), **kw)
+    assert r_new.schedule == r_ref.schedule
+    assert r_new.makespan == r_ref.makespan
+    assert r_new.jct == r_ref.jct
+    assert r_new.migrations == r_ref.migrations
+
+
 def test_determinism():
     jobs = _mini_trace(n=10, seed=3)
     r1 = simulate(jobs, JigsawScheduler(), num_machines=MACHINES)
