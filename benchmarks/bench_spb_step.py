@@ -7,13 +7,30 @@ The steps are the engine's own compiled table (donated in_shardings
 signatures — ``alias_bytes`` in each row proves params/opt-state update
 in place), so the benchmark measures exactly what the trainer runs.
 
+A second row set covers pipeline parallelism (``--pipeline-stages``,
+default 2): GPipe vs 1F1B vs SPB-truncated 1F1B at each snapped depth,
+each row carrying the schedule table's tick count and per-tick bubble
+fraction.  The pipeline rows run in a child process because the stage
+mesh needs ``--xla_force_host_platform_device_count`` set before jax
+initializes.
+
   PYTHONPATH=src python benchmarks/bench_spb_step.py [--arch yi-6b]
 """
 from __future__ import annotations
 
+import os
+
+if os.environ.get("SPB_BENCH_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["SPB_BENCH_FORCE_DEVICES"])
+
 import argparse
 import json
 import platform
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -22,9 +39,37 @@ import jax
 from repro.analysis import hlo
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import make_batch, reduced_config
-from repro.engine import SPBEngine
+from repro.engine import SPBEngine, depth_to_bwd_stages
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_spb_step.json"
+
+
+def _measure(engine: SPBEngine, b, key, reps: int) -> dict:
+    t0 = time.perf_counter()
+    compiled = engine.compile_table(engine.batch_specs_like(b),
+                                    depths=[key])[key]
+    compile_s = time.perf_counter() - t0
+    cost = hlo.analyze(compiled.as_text())
+    ma = compiled.memory_analysis()
+    # donation consumes the input state, so each timed call chains the
+    # returned state (layouts match by construction: out_shardings ==
+    # in_shardings)
+    engine.init_state(jax.random.key(0))
+    jax.block_until_ready(engine.train_step(b, 0, depth=key))     # warmup
+    t0 = time.perf_counter()
+    for r in range(reps):
+        metrics = engine.train_step(b, r + 1, depth=key)
+        jax.block_until_ready(metrics["loss"])
+    step_ms = (time.perf_counter() - t0) / reps * 1e3
+    return {
+        "depth": key if key is not None else "full",
+        "step_ms": round(step_ms, 2),
+        "compile_s": round(compile_s, 2),
+        "hlo_flops": cost.flops,
+        "hlo_bytes": cost.bytes,
+        "hlo_collective_bytes": cost.collective_bytes,
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+    }
 
 
 def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
@@ -35,33 +80,7 @@ def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
 
     engine = SPBEngine(cfg, tcfg, spb)
     b = make_batch(cfg, batch, seq)
-    rows = []
-    for key in engine.depth_keys():
-        t0 = time.perf_counter()
-        compiled = engine.compile_table(engine.batch_specs_like(b),
-                                        depths=[key])[key]
-        compile_s = time.perf_counter() - t0
-        cost = hlo.analyze(compiled.as_text())
-        ma = compiled.memory_analysis()
-        # donation consumes the input state, so each timed call chains the
-        # returned state (layouts match by construction: out_shardings ==
-        # in_shardings)
-        engine.init_state(jax.random.key(0))
-        jax.block_until_ready(engine.train_step(b, 0, depth=key))  # warmup
-        t0 = time.perf_counter()
-        for r in range(reps):
-            metrics = engine.train_step(b, r + 1, depth=key)
-            jax.block_until_ready(metrics["loss"])
-        step_ms = (time.perf_counter() - t0) / reps * 1e3
-        rows.append({
-            "depth": key if key is not None else "full",
-            "step_ms": round(step_ms, 2),
-            "compile_s": round(compile_s, 2),
-            "hlo_flops": cost.flops,
-            "hlo_bytes": cost.bytes,
-            "hlo_collective_bytes": cost.collective_bytes,
-            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
-        })
+    rows = [_measure(engine, b, key, reps) for key in engine.depth_keys()]
     return {
         "arch": arch, "batch": batch, "seq": seq, "k": k, "reps": reps,
         "backend": jax.default_backend(),
@@ -73,6 +92,58 @@ def bench(arch: str = "yi-6b", batch: int = 8, seq: int = 128, k: int = 4,
     }
 
 
+def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
+                   stages: int, microbatches: int) -> dict:
+    """Pipeline-mode rows: GPipe vs 1F1B at full depth, plus SPB-truncated
+    1F1B at every snapped depth of the k-cycle.  Runs on a ``stage`` mesh
+    of ``stages`` simulated host devices."""
+    from repro.dist.pipeline import schedules
+
+    cfg = reduced_config(arch)
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=1e-3,
+                       microbatches=microbatches)
+    spb = SPBConfig(mode="temporal", k=k)
+    rows = []
+    for kind in ("gpipe", "1f1b"):
+        engine = SPBEngine(cfg, tcfg, spb, parallelism="pipeline",
+                           pipeline_schedule=kind)
+        b = make_batch(cfg, batch, seq)
+        keys = engine.depth_keys() if kind == "1f1b" else [None]
+        for key in keys:
+            row = _measure(engine, b, key, reps)
+            bwd = depth_to_bwd_stages(cfg, key, stages)
+            sched = schedules.build(kind, stages, microbatches,
+                                    bwd_stages=bwd)
+            row.update({
+                "schedule": kind,
+                "bwd_stages": bwd,
+                "ticks": sched.num_ticks,
+                "bubble_fraction": round(
+                    schedules.bubble_fraction_of(sched), 4),
+                "max_in_flight": schedules.max_in_flight(sched),
+            })
+            rows.append(row)
+    return {"stages": stages, "microbatches": microbatches, "rows": rows}
+
+
+def _spawn_pipeline_child(args) -> dict:
+    env = dict(os.environ)
+    env["SPB_BENCH_FORCE_DEVICES"] = str(args.pipeline_stages)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, __file__, "--_pipeline-child",
+           "--arch", args.arch, "--batch", str(args.batch),
+           "--seq", str(args.seq), "--k", str(args.k),
+           "--reps", str(args.reps),
+           "--pipeline-stages", str(args.pipeline_stages),
+           "--pipeline-microbatches", str(args.pipeline_microbatches)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"pipeline bench child failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.split("PIPELINE_JSON:")[-1])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -80,14 +151,34 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--pipeline-stages", type=int, default=2,
+                    help="0 disables the pipeline row set")
+    ap.add_argument("--pipeline-microbatches", type=int, default=4)
+    ap.add_argument("--_pipeline-child", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--out", default=str(OUT))
     args = ap.parse_args()
+
+    if getattr(args, "_pipeline_child"):
+        rec = bench_pipeline(args.arch, args.batch, args.seq, args.k,
+                             args.reps, args.pipeline_stages,
+                             args.pipeline_microbatches)
+        print("PIPELINE_JSON:" + json.dumps(rec))
+        return
+
     rec = bench(args.arch, args.batch, args.seq, args.k, args.reps)
+    if args.pipeline_stages > 0:
+        rec["pipeline"] = _spawn_pipeline_child(args)
     Path(args.out).write_text(json.dumps(rec, indent=2) + "\n")
     for r in rec["rows"]:
         print(f"depth={r['depth']!s:>4}  step={r['step_ms']:8.2f}ms  "
               f"flops={r['hlo_flops']:.3e}  bytes={r['hlo_bytes']:.3e}  "
               f"alias={r['alias_bytes']:.2e}")
+    for r in rec.get("pipeline", {}).get("rows", []):
+        print(f"pipe[{r['schedule']:>5}] depth={r['depth']!s:>4} "
+              f"bwd_stages={r['bwd_stages']} step={r['step_ms']:8.2f}ms  "
+              f"flops={r['hlo_flops']:.3e}  bubble={r['bubble_fraction']} "
+              f"ticks={r['ticks']}")
     print(f"wrote {args.out}")
 
 

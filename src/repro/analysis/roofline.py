@@ -121,6 +121,41 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-parallel terms (schedule-table driven)
+# ---------------------------------------------------------------------------
+
+def pipeline_bubble_fraction(num_stages: int, num_microbatches: int, *,
+                             kind: str = "1f1b",
+                             bwd_stages: Optional[int] = None,
+                             bwd_cost: float = 2.0) -> float:
+    """Idle fraction of a pipeline schedule, measured on its work table.
+
+    Builds the actual (stage, microbatch, fwd/bwd) tick table —
+    ``repro.dist.pipeline.schedules`` — and counts idle device-time
+    slots, weighting backward ticks by ``bwd_cost``.  This replaces the
+    GPipe-only closed form ``(S-1)/(M+S-1)`` (which the table reproduces
+    exactly for a uniform-cost GPipe phase) and extends to 1F1B and the
+    SPB-truncated schedules, whose frozen-prefix stages drain early.
+    """
+    from repro.dist.pipeline import schedules
+    sched = schedules.build(kind, num_stages, num_microbatches,
+                            bwd_stages=bwd_stages)
+    return schedules.bubble_fraction_of(sched, bwd_cost=bwd_cost)
+
+
+def pipeline_step_time(step_s: float, num_stages: int,
+                       num_microbatches: int, *, kind: str = "1f1b",
+                       bwd_stages: Optional[int] = None,
+                       bwd_cost: float = 2.0) -> float:
+    """Roofline step time under pipeline parallelism: the per-stage share
+    of the non-pipelined step, inflated by the schedule's bubble."""
+    bubble = pipeline_bubble_fraction(num_stages, num_microbatches,
+                                      kind=kind, bwd_stages=bwd_stages,
+                                      bwd_cost=bwd_cost)
+    return (step_s / num_stages) / max(1.0 - bubble, 1e-9)
+
+
+# ---------------------------------------------------------------------------
 # Roofline table
 # ---------------------------------------------------------------------------
 

@@ -197,6 +197,11 @@ class SPBConfig:
     warmup_steps: int = 0             # full backprop for first N steps
     subgroup_reduce: bool = False     # reduce prefix blocks over sub-groups
     lr_rescale: bool = True           # per-block LR scaling (paper Sec 2)
+    # Pipeline-parallel sessions snap depths to stage boundaries instead of
+    # scan-unit boundaries (0 = not pipelined).  Set by SPBEngine from the
+    # mesh's 'stage' axis; keeps schedules/contributors/LR-rescale
+    # consistent with what the pipeline actually freezes.
+    pipeline_stages: int = 0
 
     def depths(self, num_layers: int) -> Tuple[int, ...]:
         """Suffix depths for levels j=1..k (ceil(j*L/k), always >= 1)."""
@@ -322,3 +327,36 @@ def snap_depth(cfg: ModelConfig, depth: int) -> int:
                 break
         off += p * count
     return L - best
+
+
+def snap_depth_to_stages(cfg: ModelConfig, depth: int,
+                         num_stages: int) -> int:
+    """Snap an SPB suffix depth UP to a pipeline-stage boundary.
+
+    Under pipeline parallelism the truncation point must be a stage
+    boundary (the last ``j`` stages run backward, the first ``k - j``
+    forward-only), so a depth of ``d`` layers becomes
+    ``ceil(d / layers_per_stage)`` live stages — like :func:`snap_depth`,
+    the snap is always toward *more* backprop, never less.
+    """
+    L = total_layers(cfg)
+    if num_stages <= 0 or L % num_stages:
+        raise ValueError(f"{L} layers not divisible by {num_stages} "
+                         f"pipeline stages")
+    per = L // num_stages
+    depth = max(1, min(depth, L))
+    return -(-depth // per) * per
+
+
+def depth_to_bwd_stages(cfg: ModelConfig, depth: Optional[int],
+                        num_stages: int) -> int:
+    """Map an SPB suffix depth to the pipeline truncation point: the
+    number of *live* (backward-running) suffix stages.  The first
+    ``num_stages - result`` stages run forward-only; ``None`` = full
+    backprop = every stage live.  The single source of truth shared by
+    the compiled pipeline steps, the depth policies, and the analyses.
+    """
+    if depth is None:
+        return num_stages
+    per = total_layers(cfg) // num_stages
+    return snap_depth_to_stages(cfg, depth, num_stages) // per

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.config import (ModelConfig, SPBConfig, combined_layer_groups,
-                          layer_groups, snap_depth, total_layers)
+                          layer_groups, snap_depth, snap_depth_to_stages,
+                          total_layers)
 
 Array = jax.Array
 
@@ -37,9 +38,15 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 def snapped_depths(cfg: ModelConfig, spb: SPBConfig) -> Tuple[int, ...]:
-    """The k suffix depths, snapped to achievable group/unit boundaries.
-    Depths are over the combined enc+dec stack (suffix from the output)."""
-    return tuple(snap_depth(cfg, d) for d in spb.depths(total_layers(cfg)))
+    """The k suffix depths, snapped to achievable boundaries: scan-unit
+    boundaries normally, stage boundaries when ``spb.pipeline_stages`` is
+    set (pipeline truncation points live on the stage axis).  Depths are
+    over the combined enc+dec stack (suffix from the output)."""
+    raw = spb.depths(total_layers(cfg))
+    if spb.pipeline_stages:
+        return tuple(snap_depth_to_stages(cfg, d, spb.pipeline_stages)
+                     for d in raw)
+    return tuple(snap_depth(cfg, d) for d in raw)
 
 
 def layer_contributors(cfg: ModelConfig, spb: SPBConfig) -> Tuple[int, ...]:

@@ -1,4 +1,5 @@
 """Distributed training engine: logical-axis sharding (``sharding``),
-depth-specialized SPB train/decode steps (``steps``), and GPipe pipeline
-parallelism (``pipeline``)."""
+depth-specialized SPB train/decode steps (``steps``), and schedule-driven
+pipeline parallelism (``pipeline`` — GPipe + 1F1B work tables interpreted
+in ``shard_map``, with SPB-truncated variants)."""
 from repro.dist import pipeline, sharding, steps  # noqa: F401

@@ -1,0 +1,21 @@
+"""Schedule-driven pipeline parallelism.
+
+A pipeline is a *schedule*: an explicit per-tick table of (stage,
+microbatch, fwd/bwd) work items (``schedules``), interpreted inside
+``shard_map`` with activation stashing and ``ppermute`` transfers for
+activations and activation-gradients (``runtime``), over per-stage
+slices of a real transformer (``stage``).  GPipe and 1F1B tables ship,
+plus the SPB-truncated variants whose frozen stages simply have no
+backward items — so XLA never sees (and the HLO provably lacks) their
+backward work.
+
+The pre-refactor ``dist/pipeline.py`` surface is re-exported unchanged:
+``pipeline_apply`` (GPipe forward), ``sequential_reference`` (oracle),
+``bubble_fraction`` (GPipe closed form).
+"""
+from repro.dist.pipeline import runtime, schedules, stage  # noqa: F401
+from repro.dist.pipeline.runtime import (  # noqa: F401
+    pipeline_apply, pipeline_train_grads, run_schedule, sequential_reference)
+from repro.dist.pipeline.schedules import (  # noqa: F401
+    Schedule, WorkItem, bubble_fraction, bubble_fraction_of, build, gpipe,
+    gpipe_forward, max_in_flight, one_f_one_b, spb_truncate, validate)

@@ -1,0 +1,243 @@
+"""Schedule interpreter: execute a pipeline work table inside ``shard_map``.
+
+One device per stage over the mesh's ``stage`` axis.  The interpreter
+walks the table tick by tick; at every tick each stage runs *its own*
+branch of a ``lax.switch`` on ``axis_index`` — the branch is generated
+from the table column, so a stage traces exactly the work the schedule
+assigns it (an SPB-frozen stage's branches contain no VJP at all, which
+is what the HLO elision tests assert), then activations ``ppermute``
+right and activation-gradients ``ppermute`` left.
+
+Data flow per stage:
+
+* ``act_stash[m]`` — the input activation of microbatch ``m`` (received
+  from the left neighbor; stage 0 reads ``xs`` directly).  Stashed at
+  arrival, consumed by both the forward and the backward of ``m``.
+* ``cot_stash[m]`` — the output cotangent of ``m``: received from the
+  right neighbor, or seeded by the loss gradient at the last stage
+  during ``m``'s forward.  Only stages the schedule gives backward work
+  ever stash cotangents.
+* ``dw`` — accumulated parameter gradients for this stage's slice;
+  reassembled to the stacked ``(S, ...)`` layout by the ``out_specs``.
+
+Because send/receive microbatch identities are read from the *static*
+table, every stash index and every ``xs[m]`` gather is a compile-time
+constant; the only runtime dispatch is the switch on the stage index
+(the same idiom as spatial SPB's per-worker ``lax.switch`` in
+``core/spb.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.pipeline import schedules as sch
+from repro.dist.pipeline.schedules import BWD, FWD, Schedule
+
+
+def _stage_leading(tree):
+    """Local view of stage-stacked params: drop the sharded leading dim."""
+    return jax.tree.map(lambda t: t[0], tree)
+
+
+def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
+                 loss_fn: Optional[Callable] = None, ys=None,
+                 head_params=None, axis_name: str = "stage",
+                 capture_input_grads: bool = False) -> Dict[str, Any]:
+    """Interpret ``sched`` over the ambient mesh's ``axis_name`` axis.
+
+    stage_params: pytree whose leaves are stacked ``(S, ...)`` (one slice
+    per stage, sharded over ``axis_name``); ``stage_fn(w, x) -> y`` with
+    ``y.shape == x.shape``; ``xs``: ``(M, mb, ...)`` microbatches
+    (replicated).  With ``loss_fn(head_params, y, ys[m]) -> scalar`` the
+    run is a training pass: returns gradients for the stage params, the
+    (replicated) head params, and — when ``capture_input_grads`` — the
+    cotangents of ``xs`` (for an embedding backward outside the pipe).
+
+    Returns a dict with ``outs`` (last-stage outputs, replicated),
+    ``loss`` (mean over microbatches), ``stage_grads`` (stacked
+    ``(S, ...)``), ``head_grads``, ``input_grads``.
+    """
+    s_, m_ = sched.num_stages, sched.num_microbatches
+    train = loss_fn is not None
+    has_bwd = sched.bwd_stages > 0
+    if has_bwd and not train:
+        raise ValueError("schedule has backward items but no loss_fn")
+    if xs.shape[0] != m_:
+        raise ValueError(f"xs carries {xs.shape[0]} microbatches, schedule "
+                         f"expects {m_}")
+    head_params = {} if head_params is None else head_params
+
+    # static lookup tables: what each stage does / receives per tick
+    fwd_at = [[None] * s_ for _ in range(sched.num_ticks)]
+    bwd_at = [[None] * s_ for _ in range(sched.num_ticks)]
+    for t, it in sched.items():
+        (fwd_at if it.kind == FWD else bwd_at)[t][it.stage] = it.microbatch
+    # stage s needs dx from its backward iff someone to its left consumes
+    # it: the left neighbor does backward work, or the caller wants input
+    # cotangents off stage 0 (embedding backward).
+    need_dx = [
+        (s == 0 and capture_input_grads) or
+        (s > 0 and sched.stage_has_bwd(s - 1))
+        for s in range(s_)]
+
+    def body(params, xs, ys, head_params):
+        w = _stage_leading(params)
+        idx = lax.axis_index(axis_name)
+        mb_shape = xs.shape[1:]
+        dt = xs.dtype
+        act_stash = jnp.zeros((m_,) + mb_shape, dt)
+        cot_stash = jnp.zeros((m_,) + mb_shape, dt)
+        outs = jnp.zeros((m_,) + mb_shape, dt)
+        in_grads = jnp.zeros((m_,) + mb_shape, dt)
+        dw = jax.tree.map(jnp.zeros_like, w)
+        head_dw = jax.tree.map(jnp.zeros_like, head_params)
+        loss_acc = jnp.zeros((), jnp.float32)
+        recv_act = jnp.zeros(mb_shape, dt)
+        recv_cot = jnp.zeros(mb_shape, dt)
+
+        inv_m = 1.0 / m_
+
+        def make_branch(t: int, s: int):
+            first, last = s == 0, s == s_ - 1
+            in_act_m = fwd_at[t - 1][s - 1] if (t > 0 and not first) else None
+            in_cot_m = bwd_at[t - 1][s + 1] if (t > 0 and not last) else None
+            if not sched.stage_has_bwd(s):
+                in_cot_m = None             # frozen stages never stash cots
+            fm, bm = fwd_at[t][s], bwd_at[t][s]
+
+            def branch(carry):
+                (recv_act, recv_cot, act_stash, cot_stash, outs, in_grads,
+                 dw, head_dw, loss_acc) = carry
+                if in_act_m is not None:
+                    act_stash = act_stash.at[in_act_m].set(recv_act)
+                if in_cot_m is not None:
+                    cot_stash = cot_stash.at[in_cot_m].set(recv_cot)
+                y_send = jnp.zeros(mb_shape, dt)
+                dx_send = jnp.zeros(mb_shape, dt)
+                if fm is not None:
+                    x_in = xs[fm] if first else act_stash[fm]
+                    y = stage_fn(w, x_in)
+                    y_send = y
+                    if last:
+                        outs = outs.at[fm].set(y)
+                        if train:
+                            val, (g_hp, g_y) = jax.value_and_grad(
+                                loss_fn, argnums=(0, 1))(head_params, y,
+                                                         ys[fm])
+                            loss_acc = loss_acc + val.astype(jnp.float32)
+                            head_dw = jax.tree.map(
+                                lambda a, g: a + g * inv_m, head_dw, g_hp)
+                            cot_stash = cot_stash.at[fm].set(
+                                (g_y * inv_m).astype(dt))
+                if bm is not None:
+                    with jax.named_scope(f"pipeline_bwd_stage{s}"):
+                        x_b = xs[bm] if first else act_stash[bm]
+                        dy = cot_stash[bm]
+                        if need_dx[s]:
+                            _, vjp_fn = jax.vjp(
+                                lambda ww, xx: stage_fn(ww, xx), w, x_b)
+                            dwi, dxi = vjp_fn(dy)
+                            dx_send = dxi
+                            if first:
+                                in_grads = in_grads.at[bm].set(dxi)
+                        else:
+                            _, vjp_fn = jax.vjp(
+                                lambda ww: stage_fn(ww, x_b), w)
+                            (dwi,) = vjp_fn(dy)
+                        dw = jax.tree.map(jnp.add, dw, dwi)
+                return (y_send, dx_send, act_stash, cot_stash, outs,
+                        in_grads, dw, head_dw, loss_acc)
+
+            return branch
+
+        right = [(i, i + 1) for i in range(s_ - 1)]
+        left = [(i, i - 1) for i in range(1, s_)]
+        for t in range(sched.num_ticks):
+            carry = (recv_act, recv_cot, act_stash, cot_stash, outs,
+                     in_grads, dw, head_dw, loss_acc)
+            (y_send, dx_send, act_stash, cot_stash, outs, in_grads, dw,
+             head_dw, loss_acc) = lax.switch(
+                idx, [make_branch(t, s) for s in range(s_)], carry)
+            if s_ > 1 and t + 1 < sched.num_ticks:
+                if any(x is not None for x in fwd_at[t]):
+                    recv_act = lax.ppermute(y_send, axis_name, right)
+                if has_bwd and any(x is not None for x in bwd_at[t]):
+                    recv_cot = lax.ppermute(dx_send, axis_name, left)
+
+        # only one stage holds each replicated output; the rest carry the
+        # zeros they were initialized with, so a plain psum broadcasts.
+        outs = lax.psum(outs, axis_name)
+        loss = lax.psum(loss_acc, axis_name) * inv_m
+        in_grads = lax.psum(in_grads, axis_name)
+        head_dw = lax.psum(head_dw, axis_name)
+        dw = jax.tree.map(lambda t_: t_[None], dw)
+        return outs, loss, dw, head_dw, in_grads
+
+    mesh = jax.sharding.get_abstract_mesh()
+    outs, loss, stage_grads, head_grads, input_grads = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name), P(), P(), P()),
+        out_specs=(P(), P(), P(axis_name), P(), P()),
+        check_vma=False)(stage_params, xs,
+                         ys if ys is not None else jnp.zeros((m_, 1)),
+                         head_params)
+    return {"outs": outs, "loss": loss, "stage_grads": stage_grads,
+            "head_grads": head_grads, "input_grads": input_grads}
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def pipeline_apply(stage_fn: Callable, stage_params, xs,
+                   axis_name: str = "stage") -> jax.Array:
+    """GPipe forward over the ambient mesh's ``axis_name`` axis.
+
+    stage_params: (S, ...) stacked weights, sharded one stage per device;
+    xs: (M, mb, ...) microbatches (replicated).  Returns (M, mb, ...)
+    outputs of the final stage, replicated.  (Interprets the
+    :func:`schedules.gpipe_forward` table — the pre-refactor hand-rolled
+    fill/drain loop, now one schedule among several.)
+    """
+    num_stages = jax.tree.leaves(stage_params)[0].shape[0]
+    sched = sch.gpipe_forward(num_stages, xs.shape[0])
+    return run_schedule(sched, stage_fn, stage_params, xs,
+                        axis_name=axis_name)["outs"]
+
+
+def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
+                         xs, ys, loss_fn: Callable, *, head_params=None,
+                         axis_name: str = "stage",
+                         capture_input_grads: bool = False
+                         ) -> Dict[str, Any]:
+    """One pipelined forward+backward pass per the schedule table.
+
+    Returns ``{'loss', 'stage_grads', 'head_grads', 'input_grads',
+    'outs'}`` where ``loss`` is the mean of ``loss_fn(head_params,
+    y_m, ys[m])`` over microbatches and the gradients are exact
+    d(loss)/d(param) for every stage the schedule runs backward on
+    (frozen stages report zeros — their VJPs are never traced).
+    """
+    return run_schedule(sched, stage_fn, stage_params, xs, loss_fn=loss_fn,
+                        ys=ys, head_params=head_params, axis_name=axis_name,
+                        capture_input_grads=capture_input_grads)
+
+
+def sequential_reference(stage_fn: Callable, stage_params, xs):
+    """Oracle: run every microbatch through all stages sequentially.
+
+    stage_params: (S, ...) stacked per-stage weights; xs: (M, mb, ...).
+    """
+    num_stages = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def apply_all(x):
+        for s in range(num_stages):
+            x = stage_fn(jax.tree.map(lambda t, s=s: t[s], stage_params), x)
+        return x
+
+    return jax.vmap(apply_all)(xs)

@@ -1,0 +1,346 @@
+"""Pipeline schedules as explicit per-tick work tables.
+
+A pipeline run *is* a :class:`Schedule`: for every tick and every stage,
+at most one :class:`WorkItem` — forward or backward of one microbatch.
+The runtime (``runtime.py``) interprets a table inside ``shard_map``
+tick by tick; everything the paper cares about is decided here, in plain
+Python, before any tracing:
+
+* **GPipe** (:func:`gpipe`) — all forwards fill/drain, then all
+  backwards in reverse microbatch order; peak activation stash is the
+  full microbatch count.
+* **1F1B** (:func:`one_f_one_b`) — PipeDream-flush/Megatron-style: each
+  stage warms up with ``S-1-s`` forwards, then alternates one-forward /
+  one-backward; same bubble as GPipe, bounded in-flight activations.
+* **SPB truncation** (:func:`spb_truncate`, or ``bwd_stages`` on the
+  builders) — the paper's structured partial backprop mapped onto the
+  pipeline axis: stages below the truncation point simply *have no
+  backward items*, so the interpreter never traces a VJP for them and
+  the compiled HLO contains zero backward work for the frozen prefix
+  (the spatial/temporal analogue of ``lm.forward_train``'s
+  ``stop_gradient`` elision).
+
+Because the table is data, analyses read it directly:
+:func:`bubble_fraction_of` measures idle slots per tick (the quantity
+the old closed form ``(S-1)/(M+S-1)`` only approximated for GPipe), and
+:func:`max_in_flight` gives the activation-stash watermark that
+separates 1F1B from GPipe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+FWD = "fwd"
+BWD = "bwd"
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    """One unit of pipeline work: ``kind`` pass of ``microbatch`` at
+    ``stage``."""
+    stage: int
+    microbatch: int
+    kind: str                     # FWD | BWD
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """An explicit per-tick pipeline work table.
+
+    ``ticks[t][s]`` is the :class:`WorkItem` stage ``s`` executes at tick
+    ``t`` (or None = idle).  ``bwd_stages`` counts the *suffix* stages
+    that run backward (SPB truncation point = ``num_stages -
+    bwd_stages``); ``num_stages`` means full backprop.
+    """
+    name: str
+    num_stages: int
+    num_microbatches: int
+    bwd_stages: int
+    ticks: Tuple[Tuple[Optional[WorkItem], ...], ...]
+
+    @property
+    def num_ticks(self) -> int:
+        return len(self.ticks)
+
+    @property
+    def first_bwd_stage(self) -> int:
+        """Stages below this index are frozen (forward-only)."""
+        return self.num_stages - self.bwd_stages
+
+    def items(self):
+        for t, row in enumerate(self.ticks):
+            for it in row:
+                if it is not None:
+                    yield t, it
+
+    def stage_has_bwd(self, stage: int) -> bool:
+        return stage >= self.first_bwd_stage
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def gpipe_forward(num_stages: int, num_microbatches: int) -> Schedule:
+    """Forward-only fill/drain (the schedule behind ``pipeline_apply``)."""
+    s_, m_ = num_stages, num_microbatches
+    ticks = []
+    for t in range(m_ + s_ - 1):
+        row = []
+        for s in range(s_):
+            m = t - s
+            row.append(WorkItem(s, m, FWD) if 0 <= m < m_ else None)
+        ticks.append(tuple(row))
+    return validate(Schedule("gpipe-fwd", s_, m_, 0, tuple(ticks)))
+
+
+def gpipe(num_stages: int, num_microbatches: int, *,
+          bwd_stages: Optional[int] = None) -> Schedule:
+    """Classic GPipe: full forward fill/drain, then backward fill/drain
+    in reverse microbatch order."""
+    s_, m_ = num_stages, num_microbatches
+    b_ = s_ if bwd_stages is None else bwd_stages
+    _check_bwd_stages(s_, b_)
+    fwd_ticks = m_ + s_ - 1
+    ticks: Dict[int, Dict[int, WorkItem]] = {}
+    for m in range(m_):
+        for s in range(s_):
+            ticks.setdefault(m + s, {})[s] = WorkItem(s, m, FWD)
+    for m in range(m_):
+        for s in range(s_ - b_, s_):
+            t = fwd_ticks + (m_ - 1 - m) + (s_ - 1 - s)
+            ticks.setdefault(t, {})[s] = WorkItem(s, m, BWD)
+    return validate(_from_dict("gpipe", s_, m_, b_, ticks))
+
+
+def one_f_one_b(num_stages: int, num_microbatches: int, *,
+                bwd_stages: Optional[int] = None) -> Schedule:
+    """1F1B (PipeDream-flush): greedy per-stage policy — warm up with
+    ``min(S-1-s, M)`` forwards, then prefer backward whenever one is
+    ready.  With ``bwd_stages < S`` the frozen prefix never waits on
+    cotangents, so its forwards pack back-to-back (the SPB win shows up
+    directly as a shorter table)."""
+    s_, m_ = num_stages, num_microbatches
+    b_ = s_ if bwd_stages is None else bwd_stages
+    _check_bwd_stages(s_, b_)
+    first_bwd = s_ - b_
+    fwd_done: Dict[Tuple[int, int], int] = {}     # (m, s) -> tick
+    bwd_done: Dict[Tuple[int, int], int] = {}
+    next_fwd = [0] * s_
+    next_bwd = [0 if s >= first_bwd else m_ for s in range(s_)]
+    warmup = [min(s_ - 1 - s, m_) for s in range(s_)]
+    issued_fwd = [0] * s_
+    ticks = []
+    while any(next_fwd[s] < m_ for s in range(s_)) or \
+            any(next_bwd[s] < m_ for s in range(s_)):
+        t = len(ticks)
+        row: list = [None] * s_
+        for s in range(s_):
+            def fwd_ready():
+                m = next_fwd[s]
+                if m >= m_ or (s > 0 and fwd_done.get((m, s - 1), t) >= t):
+                    return False
+                if s >= first_bwd:
+                    # canonical 1F1B in-flight cap: beyond warmup, each
+                    # forward must be paid for by a completed backward
+                    # (frozen stages free-run — the SPB packing win)
+                    return issued_fwd[s] < warmup[s] + next_bwd[s] + 1
+                return True
+
+            def bwd_ready():
+                m = next_bwd[s]
+                if m >= m_:
+                    return False
+                if s == s_ - 1:
+                    return fwd_done.get((m, s), t) < t
+                return bwd_done.get((m, s + 1), t) < t
+
+            if issued_fwd[s] < warmup[s] and fwd_ready():
+                kind = FWD
+            elif bwd_ready():
+                kind = BWD
+            elif fwd_ready():
+                kind = FWD
+            else:
+                continue
+            if kind == FWD:
+                m = next_fwd[s]
+                row[s] = WorkItem(s, m, FWD)
+                fwd_done[(m, s)] = t
+                next_fwd[s] += 1
+                issued_fwd[s] += 1
+            else:
+                m = next_bwd[s]
+                row[s] = WorkItem(s, m, BWD)
+                bwd_done[(m, s)] = t
+                next_bwd[s] += 1
+        if not any(row):
+            raise RuntimeError(
+                f"1F1B builder stalled at tick {t} (S={s_}, M={m_}, "
+                f"bwd_stages={b_})")
+        ticks.append(tuple(row))
+    return validate(Schedule("1f1b", s_, m_, b_, tuple(ticks)))
+
+
+BUILDERS = {"gpipe": gpipe, "1f1b": one_f_one_b}
+
+
+def build(kind: str, num_stages: int, num_microbatches: int, *,
+          bwd_stages: Optional[int] = None) -> Schedule:
+    """Builder registry: 'gpipe' | '1f1b' (+ optional SPB truncation)."""
+    if kind not in BUILDERS:
+        raise ValueError(f"unknown pipeline schedule {kind!r}; "
+                         f"known: {sorted(BUILDERS)}")
+    return BUILDERS[kind](num_stages, num_microbatches,
+                          bwd_stages=bwd_stages)
+
+
+def spb_truncate(sched: Schedule, bwd_stages: int) -> Schedule:
+    """Drop backward items for stages below the truncation point and
+    compact now-empty ticks.  ``one_f_one_b(..., bwd_stages=)`` packs
+    tighter (frozen stages stop waiting for cotangent turns); this
+    generic form keeps the base schedule's forward timing."""
+    _check_bwd_stages(sched.num_stages, bwd_stages)
+    first_bwd = sched.num_stages - bwd_stages
+    ticks = []
+    for row in sched.ticks:
+        new_row = tuple(
+            None if (it is not None and it.kind == BWD
+                     and it.stage < first_bwd) else it
+            for it in row)
+        if any(it is not None for it in new_row):
+            ticks.append(new_row)
+    return validate(Schedule(f"{sched.name}-spb{bwd_stages}",
+                             sched.num_stages, sched.num_microbatches,
+                             bwd_stages, tuple(ticks)))
+
+
+def _from_dict(name, s_, m_, b_, ticks: Dict[int, Dict[int, WorkItem]]
+               ) -> Schedule:
+    out = []
+    for t in range(max(ticks) + 1):
+        row = ticks.get(t, {})
+        out.append(tuple(row.get(s) for s in range(s_)))
+    return Schedule(name, s_, m_, b_, tuple(out))
+
+
+def _check_bwd_stages(num_stages: int, bwd_stages: int) -> None:
+    if not 0 <= bwd_stages <= num_stages:
+        raise ValueError(f"bwd_stages={bwd_stages} out of range for "
+                         f"{num_stages} stages")
+
+
+# ---------------------------------------------------------------------------
+# Invariants
+# ---------------------------------------------------------------------------
+
+def validate(sched: Schedule) -> Schedule:
+    """Check the table invariants the runtime relies on.
+
+    * one item per stage per tick, ``item.stage`` matching its column;
+    * every (microbatch, stage) has exactly one forward; forwards flow
+      left-to-right with at least one tick between neighbor stages (the
+      ``ppermute`` transfer);
+    * backward items exist exactly for the suffix ``bwd_stages`` stages,
+      once per microbatch, flowing right-to-left with a one-tick gap;
+    * at a given stage, a microbatch's backward comes strictly after its
+      forward.
+    """
+    s_, m_ = sched.num_stages, sched.num_microbatches
+    fwd: Dict[Tuple[int, int], int] = {}
+    bwd: Dict[Tuple[int, int], int] = {}
+    for t, row in enumerate(sched.ticks):
+        if len(row) != s_:
+            raise ValueError(f"tick {t}: {len(row)} slots != {s_} stages")
+        for s, it in enumerate(row):
+            if it is None:
+                continue
+            if it.stage != s:
+                raise ValueError(f"tick {t}: item {it} in column {s}")
+            if not 0 <= it.microbatch < m_:
+                raise ValueError(f"tick {t}: bad microbatch in {it}")
+            key = (it.microbatch, s)
+            book = fwd if it.kind == FWD else bwd
+            if key in book:
+                raise ValueError(f"duplicate {it.kind} for mb "
+                                 f"{it.microbatch} at stage {s}")
+            book[key] = t
+    for m in range(m_):
+        for s in range(s_):
+            if (m, s) not in fwd:
+                raise ValueError(f"missing fwd of mb {m} at stage {s}")
+            if s > 0 and fwd[(m, s)] <= fwd[(m, s - 1)]:
+                raise ValueError(
+                    f"fwd of mb {m}: stage {s} at tick {fwd[(m, s)]} not "
+                    f"after stage {s - 1} at {fwd[(m, s - 1)]}")
+    first_bwd = sched.first_bwd_stage
+    for (m, s), t in bwd.items():
+        if s < first_bwd:
+            raise ValueError(f"bwd of mb {m} at frozen stage {s}")
+        if t <= fwd[(m, s)]:
+            raise ValueError(f"bwd of mb {m} at stage {s} (tick {t}) not "
+                             f"after its fwd (tick {fwd[(m, s)]})")
+        if s < s_ - 1 and ((m, s + 1) not in bwd
+                           or t <= bwd[(m, s + 1)]):
+            raise ValueError(f"bwd of mb {m} at stage {s} not after "
+                             f"stage {s + 1}")
+    for s in range(first_bwd, s_):
+        missing = [m for m in range(m_) if (m, s) not in bwd]
+        if missing:
+            raise ValueError(f"live stage {s} missing bwd for mbs {missing}")
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Table-derived analyses
+# ---------------------------------------------------------------------------
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    """Closed-form idle fraction of a GPipe phase, (S-1)/(M+S-1).
+
+    Kept for the pre-refactor callers; :func:`bubble_fraction_of`
+    measures any schedule (1F1B, truncated, weighted costs) directly
+    from its table.
+    """
+    s, m = num_stages, num_microbatches
+    return (s - 1) / (m + s - 1)
+
+
+def bubble_fraction_of(sched: Schedule, bwd_cost: float = 2.0) -> float:
+    """Idle fraction of the device-time rectangle, measured on the table.
+
+    Each tick's duration is its most expensive concurrent item (forward
+    = 1, backward = ``bwd_cost``); a stage's busy time is the sum of its
+    own items' costs.  For a forward-only GPipe table with uniform costs
+    this reduces exactly to the closed form ``(S-1)/(M+S-1)``.
+    """
+    cost = {FWD: 1.0, BWD: bwd_cost}
+    wall = 0.0
+    busy = 0.0
+    for row in sched.ticks:
+        tick_costs = [cost[it.kind] for it in row if it is not None]
+        wall += max(tick_costs) if tick_costs else 0.0
+        busy += sum(tick_costs)
+    if wall == 0.0:
+        return 0.0
+    return 1.0 - busy / (sched.num_stages * wall)
+
+
+def max_in_flight(sched: Schedule) -> int:
+    """Peak number of activations stashed *awaiting a backward* at any
+    stage — the memory watermark that separates 1F1B (≤ S) from GPipe
+    (= M).  Frozen stages hold nothing: their forward consumes its input
+    in the same tick and no backward will ever read it, so SPB
+    truncation shrinks this watermark along with the compute."""
+    peak = 0
+    live = [0] * sched.num_stages
+    for _, it in sched.items():
+        if it.stage < sched.first_bwd_stage:
+            continue
+        if it.kind == FWD:
+            live[it.stage] += 1
+            peak = max(peak, live[it.stage])
+        else:
+            live[it.stage] -= 1
+    return peak

@@ -1,0 +1,125 @@
+"""Stage partitioning: map a ``models/lm.py`` transformer onto pipeline
+stages.
+
+The decoder stack is already stored stacked for ``lax.scan`` (one
+``(count, ...)`` leaf per parameter of the repeating unit), so a pipeline
+stage is just a contiguous slice of that leading axis: reshaping
+``(count, ...) -> (S, count/S, ...)`` and sharding the new axis over the
+mesh's ``stage`` axis *is* the partition — each device materializes only
+its own ``count/S`` layers, placed by the same logical-rule table as
+every other tensor (``dist/sharding.py``; the ``stage`` role).
+
+The embedding and the head (final norm + unembedding) are not part of
+the repeating unit and run *outside* the pipelined region, replicated:
+the train step embeds tokens before feeding microbatches in, and the
+last stage's loss closure (:func:`make_head_loss`) owns the head — its
+gradients come back through the schedule runtime's ``head_grads``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, layer_groups, total_layers
+from repro.models import layers as L
+from repro.models import lm
+
+
+def check_pipeline_compatible(cfg: ModelConfig, num_stages: int) -> None:
+    """Pipeline stages slice the scanned decoder stack, so the model must
+    be a single homogeneous stack whose unit count divides evenly."""
+    groups = layer_groups(cfg)
+    problems = []
+    if cfg.enc_layers:
+        problems.append("encoder-decoder stacks (enc_layers > 0)")
+    if cfg.frontend:
+        problems.append("modality frontends")
+    if cfg.moe is not None:
+        problems.append("MoE stacks (aux loss crosses stage boundaries)")
+    if len(groups) != 1:
+        problems.append(f"heterogeneous layer groups ({len(groups)} scan "
+                        f"groups; pipeline stages need one)")
+    elif groups[0][1] % num_stages:
+        problems.append(f"{groups[0][1]} scan units not divisible by "
+                        f"{num_stages} stages")
+    if problems:
+        raise ValueError(f"{cfg.name}: not pipeline-partitionable — "
+                         + "; ".join(problems))
+
+
+def layers_per_stage(cfg: ModelConfig, num_stages: int) -> int:
+    l_ = total_layers(cfg)
+    if l_ % num_stages:
+        raise ValueError(f"{l_} layers not divisible by {num_stages} stages")
+    return l_ // num_stages
+
+
+def stack_stage_params(groups: List[Any], cfg: ModelConfig,
+                       num_stages: int):
+    """``params['groups']`` -> stage-stacked pytree: every ``(count, ...)``
+    leaf becomes ``(S, count/S, ...)``.  When the leading axis is already
+    sharded over ``stage`` this reshape is layout-preserving (the split
+    dim aligns with the shard boundaries)."""
+    (g,) = groups
+    return jax.tree.map(
+        lambda t: t.reshape((num_stages, t.shape[0] // num_stages)
+                            + t.shape[1:]), g)
+
+
+def unstack_stage_grads(stage_grads, cfg: ModelConfig, num_stages: int
+                        ) -> List[Any]:
+    """Inverse of :func:`stack_stage_params`, back to ``params['groups']``
+    layout so the optimizer sees the gradient tree it expects."""
+    return [jax.tree.map(
+        lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+        stage_grads)]
+
+
+def make_stage_fn(cfg: ModelConfig) -> Callable:
+    """One pipeline stage: scan this stage's slice of decoder units.
+
+    ``w`` is the per-stage gparams tree (``(count/S, ...)`` leaves), as
+    handed out by the schedule runtime; ``x`` is ``(mb, seq, d_model)``.
+    """
+    (unit, _count) = layer_groups(cfg)[0]
+
+    def stage_fn(w, x):
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+        x, _aux = lm.run_group_train(x, aux, w, unit, cfg, positions)
+        return x
+
+    return stage_fn
+
+
+def make_head_loss(cfg: ModelConfig) -> Callable:
+    """Loss closure for the last stage: final norm + unembed + xent over
+    one microbatch.  ``hp`` carries the replicated head params (and the
+    tied embedding table, whose unembedding gradient flows back here)."""
+
+    def head_loss(hp, y, labels):
+        x = L.rms_norm(y, hp["final_norm"], cfg.norm_eps)
+        logits = L.unembed(hp["embed"], x, cfg)
+        return L.softmax_xent(logits, labels, valid_vocab=cfg.vocab_size)
+
+    return head_loss
+
+
+def head_params_of(params: Dict[str, Any]) -> Dict[str, Any]:
+    return {"final_norm": params["final_norm"], "embed": params["embed"]}
+
+
+def embed_tokens(embed_params, tokens, cfg: ModelConfig):
+    """Token embedding for the pipeline inlet (runs outside the pipe,
+    replicated across stages)."""
+    from repro.dist.sharding import shard
+    return shard(L.embed(embed_params, tokens, cfg), "batch", "seq", "embed")
+
+
+def stage_axis_spec(mesh=None) -> P:
+    """The resolved mesh spec of the logical ``stage`` role."""
+    from repro.dist import sharding as shd
+    return shd.spec_for(("stage",), mesh=mesh)

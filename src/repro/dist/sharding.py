@@ -36,7 +36,7 @@ DEFAULT_RULES: Dict[str, Any] = {
     "vocab": "model",
     "model": "model",
     "expert": "model",
-    "stage": None,
+    "stage": "stage",       # dropped on meshes without a pipeline axis
 }
 
 _overrides: contextvars.ContextVar[Optional[Dict[str, Any]]] = \
@@ -265,3 +265,42 @@ def state_pspec(state_shapes: Any, mesh=None, *, zero1: bool = False):
                 is_leaf=lambda x: isinstance(x, P))
         opt[key] = sub_spec
     return {"params": pspec, "opt": opt, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-parallel train-state PartitionSpecs
+# ---------------------------------------------------------------------------
+
+def _with_stage_dim0(spec: P, leaf, stage_axes) -> P:
+    entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+    if entries and entries[0] is None:
+        entries[0] = stage_axes
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def pipeline_state_pspec(state_shapes: Any, mesh=None, *,
+                        zero1: bool = False):
+    """Train-state specs for a pipeline session: the scanned layer stacks
+    (every leaf under ``groups``, in params *and* optimizer moments)
+    additionally shard their leading layer axis over the mesh's ``stage``
+    axis — each device holds exactly its stage's slice of weights,
+    moments and master copies.  Everything else (embedding, head, step)
+    stays on the normal rule table, replicated across stages.
+    """
+    if mesh is None:
+        mesh = _ambient_mesh()
+    base = state_pspec(state_shapes, mesh=mesh, zero1=zero1)
+    stage_spec = spec_for(("stage",), mesh=mesh)
+    if not len(stage_spec):                # no stage axis on this mesh
+        return base
+    (stage_axes,) = stage_spec
+
+    def add(path, spec, leaf):
+        if "groups" in _path_keys(path):
+            return _with_stage_dim0(spec, leaf, stage_axes)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        add, base, state_shapes, is_leaf=lambda x: isinstance(x, P))

@@ -240,6 +240,105 @@ def _subgroup_rereduce(grads, cfg: ModelConfig, spb_cfg: SPBConfig,
 
 
 # ---------------------------------------------------------------------------
+# Pipelined SPB: schedule-driven pipeline-parallel train step
+# ---------------------------------------------------------------------------
+
+def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                             spb_cfg: Optional[SPBConfig] = None, *,
+                             num_stages: int, depth: Optional[int] = None,
+                             schedule: str = "1f1b",
+                             axis_name: str = "stage") -> Callable:
+    """A (state, batch) -> (state, metrics) step that runs the layer stack
+    as a pipeline over the mesh's ``axis_name`` axis.
+
+    The step interprets a :mod:`repro.dist.pipeline.schedules` work table
+    (GPipe fill/drain or 1F1B) inside ``shard_map``; ``depth`` is the SPB
+    suffix depth, mapped to a stage truncation point — stages below it
+    get *no backward items*, so their VJPs are never traced and XLA emits
+    zero backward work for them (the pipeline analogue of the temporal
+    steps' ``stop_gradient`` elision).  Same signature as the temporal /
+    spatial steps, so ``SPBEngine``'s per-depth table, donation and AOT
+    cache apply unchanged.
+    """
+    from repro.config import depth_to_bwd_stages
+    from repro.dist import pipeline as pp
+
+    pp.stage.check_pipeline_compatible(cfg, num_stages)
+    m = max(1, tcfg.microbatches)
+    bwd_stages = depth_to_bwd_stages(cfg, depth, num_stages)
+    sched = pp.schedules.build(schedule, num_stages, m,
+                               bwd_stages=bwd_stages)
+    stage_fn = pp.stage.make_stage_fn(cfg)
+    head_loss = pp.stage.make_head_loss(cfg)
+    embed_live = bwd_stages == num_stages   # stage 0 backprops -> so does
+                                            # the embedding lookup
+
+    def step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        b = tokens.shape[0]
+        if b % m:
+            raise ValueError(f"batch size {b} not divisible by {m} "
+                             f"microbatches")
+
+        def embed_fn(ep):
+            return pp.stage.embed_tokens(ep, tokens, cfg)
+
+        if embed_live:
+            x, embed_vjp = jax.vjp(embed_fn, params["embed"])
+        else:
+            x, embed_vjp = embed_fn(params["embed"]), None
+        xs = x.reshape((m, b // m) + x.shape[1:])
+        ys = labels.reshape((m, b // m) + labels.shape[1:])
+        stacked = pp.stage.stack_stage_params(params["groups"], cfg,
+                                              num_stages)
+        res = pp.runtime.pipeline_train_grads(
+            sched, stage_fn, stacked, xs, ys, head_loss,
+            head_params=pp.stage.head_params_of(params),
+            axis_name=axis_name, capture_input_grads=embed_live)
+
+        head_grads = res["head_grads"]
+        d_embed = head_grads["embed"]          # tied unembedding path
+        if embed_vjp is not None:
+            dx = res["input_grads"].reshape(x.shape)
+            (de,) = embed_vjp(dx)
+            d_embed = jax.tree.map(jnp.add, d_embed, de)
+        grads = {
+            "embed": d_embed,
+            "groups": pp.stage.unstack_stage_grads(res["stage_grads"], cfg,
+                                                   num_stages),
+            "final_norm": head_grads["final_norm"],
+        }
+        metrics = {"loss": res["loss"], "xent": res["loss"],
+                   "moe_aux": jnp.zeros((), jnp.float32)}
+        return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg)
+
+    return step
+
+
+def build_pipeline_train_steps(cfg: ModelConfig, tcfg: TrainConfig,
+                               spb_cfg: SPBConfig, *, num_stages: int,
+                               schedule: str = "1f1b"
+                               ) -> Dict[Any, Callable]:
+    """Per-depth pipeline step table: ``None`` (full backprop) plus, for
+    temporal SPB, one entry per distinct stage-snapped cycle depth."""
+    if spb_cfg.mode in ("spatial", "temporal-mb"):
+        raise ValueError(f"SPB mode {spb_cfg.mode!r} is not supported "
+                         f"under pipeline parallelism (use 'temporal' "
+                         f"or 'off')")
+    steps: Dict[Any, Callable] = {
+        None: make_pipeline_train_step(cfg, tcfg, spb_cfg,
+                                       num_stages=num_stages,
+                                       schedule=schedule)}
+    if spb_cfg.mode == "temporal":
+        for d in sorted(set(spb_lib.snapped_depths(cfg, spb_cfg))):
+            steps[d] = make_pipeline_train_step(
+                cfg, tcfg, spb_cfg, num_stages=num_stages, depth=d,
+                schedule=schedule)
+    return steps
+
+
+# ---------------------------------------------------------------------------
 # The depth-specialized step table
 # ---------------------------------------------------------------------------
 

@@ -11,4 +11,4 @@ from repro.engine import aot, policies  # noqa: F401
 from repro.engine.engine import SPBEngine  # noqa: F401
 from repro.engine.policies import (  # noqa: F401
     CostModelPolicy, CyclePolicy, DepthPolicy, FullBackpropPolicy,
-    SchedulerHookPolicy, make_policy)
+    SchedulerHookPolicy, depth_to_bwd_stages, make_policy)

@@ -71,7 +71,7 @@ def _env_sig(mesh) -> Dict[str, Any]:
 
 
 def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
-              donate: bool) -> str:
+              donate: bool, extra=None) -> str:
     """Digest identifying one compiled step table.
 
     Only fields that reach the compiled program participate — checkpoint /
@@ -93,6 +93,8 @@ def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
         "donate": donate,
         "env": _env_sig(mesh),
     }
+    if extra:
+        ident["extra"] = extra
     blob = json.dumps(ident, sort_keys=True, default=str).encode()
     return f"{cfg.name}__{hashlib.sha256(blob).hexdigest()[:16]}"
 

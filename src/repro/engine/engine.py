@@ -32,7 +32,10 @@ from typing import Any, Callable, Dict, Optional
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.config import ModelConfig, SPBConfig, TrainConfig, snap_depth
+import dataclasses
+
+from repro.config import (ModelConfig, SPBConfig, TrainConfig, snap_depth,
+                          snap_depth_to_stages)
 from repro.dist import sharding as shd
 from repro.dist import steps as steps_lib
 from repro.engine import aot
@@ -62,25 +65,57 @@ class SPBEngine:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
                  spb_cfg: Optional[SPBConfig] = None, *,
                  mesh=None, policy: Optional[DepthPolicy] = None,
-                 donate: bool = True, zero1: bool = True):
+                 donate: bool = True, zero1: bool = True,
+                 parallelism: str = "spmd",
+                 pipeline_schedule: str = "1f1b"):
+        if parallelism not in ("spmd", "pipeline"):
+            raise ValueError(f"unknown parallelism {parallelism!r}; "
+                             f"known: spmd, pipeline")
         self.cfg = cfg
         self.tcfg = tcfg
         self.spb = spb_cfg or SPBConfig()
-        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.parallelism = parallelism
+        self.pipeline_schedule = pipeline_schedule
+        if parallelism == "pipeline":
+            from repro.launch.mesh import make_pipeline_mesh
+            self.mesh = mesh if mesh is not None else make_pipeline_mesh()
+            if "stage" not in self.mesh.axis_names:
+                raise ValueError("pipeline parallelism needs a mesh with a "
+                                 "'stage' axis (launch.mesh."
+                                 "make_pipeline_mesh)")
+            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            self.pipeline_stages = sizes["stage"]
+            # stage-snap the whole depth machinery (schedules, policies,
+            # LR-rescale contributors) to what the pipeline can freeze
+            if self.spb.pipeline_stages != self.pipeline_stages:
+                self.spb = dataclasses.replace(
+                    self.spb, pipeline_stages=self.pipeline_stages)
+        else:
+            self.mesh = mesh if mesh is not None else make_host_mesh()
+            self.pipeline_stages = 0
         self.donate = donate
         self.zero1 = zero1
         self.policy = policy or make_policy("cycle", cfg, self.spb)
 
         # the old dist.steps functions are the engine's internals
-        self._raw: Dict[Any, Callable] = steps_lib.build_spb_train_steps(
-            cfg, tcfg, self.spb)
+        if parallelism == "pipeline":
+            self._raw: Dict[Any, Callable] = \
+                steps_lib.build_pipeline_train_steps(
+                    cfg, tcfg, self.spb, num_stages=self.pipeline_stages,
+                    schedule=pipeline_schedule)
+        else:
+            self._raw = steps_lib.build_spb_train_steps(cfg, tcfg, self.spb)
 
         # shapes + shardings computed exactly once for the whole session
         # (the pre-engine drivers recomputed these per depth and dropped
         # the result)
         self.state_shapes: State = steps_lib.train_state_shapes(cfg, tcfg)
-        self.state_specs = shd.state_pspec(self.state_shapes, mesh=self.mesh,
-                                           zero1=zero1)
+        if parallelism == "pipeline":
+            self.state_specs = shd.pipeline_state_pspec(
+                self.state_shapes, mesh=self.mesh, zero1=zero1)
+        else:
+            self.state_specs = shd.state_pspec(
+                self.state_shapes, mesh=self.mesh, zero1=zero1)
         self.state_shardings = jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), self.state_specs,
             is_leaf=lambda x: isinstance(x, P))
@@ -125,8 +160,14 @@ class SPBEngine:
     def _raw_step(self, key: Any) -> Callable:
         if key not in self._raw:
             # lazily extend the table for off-cycle depths (hook policy)
-            self._raw[key] = steps_lib.make_train_step(
-                self.cfg, self.tcfg, self.spb, depth=key)
+            if self.parallelism == "pipeline":
+                self._raw[key] = steps_lib.make_pipeline_train_step(
+                    self.cfg, self.tcfg, self.spb, depth=key,
+                    num_stages=self.pipeline_stages,
+                    schedule=self.pipeline_schedule)
+            else:
+                self._raw[key] = steps_lib.make_train_step(
+                    self.cfg, self.tcfg, self.spb, depth=key)
         return self._raw[key]
 
     def _jit(self, key: Any):
@@ -159,7 +200,11 @@ class SPBEngine:
         the SPB savings without any visible failure."""
         if depth is None:
             return None
-        depth = snap_depth(self.cfg, depth)
+        if self.parallelism == "pipeline":
+            depth = snap_depth_to_stages(self.cfg, depth,
+                                         self.pipeline_stages)
+        else:
+            depth = snap_depth(self.cfg, depth)
         if not self._frozen or depth in self._steps:
             return depth
         deeper = sorted(k for k in self._steps
@@ -244,9 +289,12 @@ class SPBEngine:
 
     def aot_cache_path(self, batch_specs, cache_root=None) -> Path:
         root = Path(cache_root) if cache_root else aot.DEFAULT_CACHE
+        extra = (None if self.parallelism == "spmd" else
+                 {"parallelism": self.parallelism,
+                  "pipeline_schedule": self.pipeline_schedule})
         return root / aot.cache_key(self.cfg, self.tcfg, self.spb, self.mesh,
                                     batch_specs, zero1=self.zero1,
-                                    donate=self.donate)
+                                    donate=self.donate, extra=extra)
 
     def export_aot(self, path, batch_specs=None) -> Path:
         """Serialize the compiled step table to ``path`` (compiling first

@@ -26,7 +26,13 @@ from __future__ import annotations
 import math
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
-from repro.config import ModelConfig, SPBConfig, snap_depth, total_layers
+# depth_to_bwd_stages is re-exported here because it IS the
+# policy->execution mapping: a DepthPolicy's suffix depth becomes the
+# pipeline truncation point (number of live suffix stages).  The
+# implementation lives in repro.config so the compiled steps
+# (dist/steps.py, which cannot import engine/) share the same snapping.
+from repro.config import (ModelConfig, SPBConfig,  # noqa: F401
+                          depth_to_bwd_stages, snap_depth, total_layers)
 from repro.core import spb as spb_lib
 
 

@@ -96,18 +96,79 @@ class _GangScheduler(Scheduler):
 
     A job is admitted when enough machines are simultaneously free; its
     workers stay pinned (no migration).  Subclasses define the admission
-    order.  Workers all take the *maximum* worker duration per iteration
+    key.  Workers all take the *maximum* worker duration per iteration
     (gang barrier — idle bubbles instead of SPB exploitation, Fig 2b).
+
+    Like :class:`JigsawScheduler`, the admission order is maintained
+    *incrementally*: each job's priority key is insorted once and only
+    re-insorted when it actually changes (FIFO/Gandiva keys are static;
+    Tiresias' attained service changes only for jobs placed last round),
+    with inactive entries (superseded keys, finished or mid-iteration
+    jobs) skipped lazily and compacted away once they dominate — instead
+    of re-sorting every ready job id with a Python key lambda each
+    ``place()`` call.  Jobs whose keys compare equal keep the historical
+    stable-sort order (current ready-queue order), so placements are
+    byte-identical to the former full re-sort — pinned by
+    ``tests/test_scheduler.py`` on the repo traces and the fig4
+    benchmark workload.
     """
     name = "gang"
 
-    def _order(self, job_ids: List[int], jobs: Dict[int, JobSpec],
-               state: ClusterState, now: float) -> List[int]:
+    def _key(self, jid: int, jobs: Dict[int, JobSpec]):
+        """Admission priority (smaller = earlier); must match what the
+        historical ``sorted(job_ids, key=...)`` used."""
         raise NotImplementedError
 
     def __init__(self):
         self.pinned: Dict[Tuple[int, int], int] = {}
         self.attained: Dict[int, float] = defaultdict(float)
+        self._seq = 0
+        self._index: List[tuple] = []           # sorted (key, seq, jid)
+        self._cur: Dict[int, tuple] = {}        # jid -> live (key, seq)
+
+    def _note(self, jid: int, jobs: Dict[int, JobSpec]) -> None:
+        key = self._key(jid, jobs)
+        cur = self._cur.get(jid)
+        if cur is not None and cur[0] == key:
+            return                              # key unchanged: keep entry
+        entry = (key, self._seq, jid)
+        self._seq += 1
+        insort(self._index, entry)
+        self._cur[jid] = (key, entry[1])
+
+    def _order(self, job_ids: List[int], jobs: Dict[int, JobSpec],
+               state: ClusterState, now: float) -> List[int]:
+        for jid in job_ids:
+            self._note(jid, jobs)
+        live = set(job_ids)
+        pos = {jid: i for i, jid in enumerate(job_ids)}
+        out: List[int] = []
+        run: List[int] = []
+        run_key: object = object()
+        inactive = 0            # superseded keys + finished/busy jobs
+        for key, seq, jid in self._index:
+            if self._cur.get(jid) != (key, seq) or jid not in live:
+                inactive += 1                   # lazily skipped
+                continue
+            if key != run_key:
+                run.sort(key=pos.__getitem__)
+                out.extend(run)
+                run, run_key = [jid], key
+            else:
+                run.append(jid)                 # tie: current-queue order
+        run.sort(key=pos.__getitem__)
+        out.extend(run)
+        if inactive * 2 > len(self._index):
+            # keep only this round's live entries; evicted jobs (finished
+            # forever, or mid-iteration and coming back) drop out of _cur
+            # too, so returning ones simply re-insort.  A fresh seq is
+            # placement-neutral: equal-key output order is re-derived
+            # from the current queue position every call.
+            self._index = [e for e in self._index
+                           if self._cur.get(e[2]) == (e[0], e[1])
+                           and e[2] in live]
+            self._cur = {jid: (key, seq) for key, seq, jid in self._index}
+        return out
 
     def place(self, tasks: List[Task], state: ClusterState, now: float,
               jobs: Dict[int, JobSpec], gamma: float) -> List[Assignment]:
@@ -148,8 +209,8 @@ class TiresiasScheduler(_GangScheduler):
     """Least Attained Service ordering (Tiresias, NSDI'19)."""
     name = "tiresias"
 
-    def _order(self, job_ids, jobs, state, now):
-        return sorted(job_ids, key=lambda j: self.attained[j])
+    def _key(self, jid, jobs):
+        return self.attained[jid]
 
 
 class GandivaScheduler(_GangScheduler):
@@ -158,17 +219,16 @@ class GandivaScheduler(_GangScheduler):
     earliest availability."""
     name = "gandiva"
 
-    def _order(self, job_ids, jobs, state, now):
+    def _key(self, jid, jobs):
         # favor small jobs first to pack tightly
-        return sorted(job_ids, key=lambda j: (jobs[j].num_workers,
-                                              jobs[j].arrival))
+        return (jobs[jid].num_workers, jobs[jid].arrival)
 
 
 class FifoScheduler(_GangScheduler):
     name = "fifo"
 
-    def _order(self, job_ids, jobs, state, now):
-        return sorted(job_ids, key=lambda j: jobs[j].arrival)
+    def _key(self, jid, jobs):
+        return jobs[jid].arrival
 
 
 ALL_SCHEDULERS = {

@@ -35,6 +35,22 @@ def make_host_mesh():
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_pipeline_mesh(num_stages: Optional[int] = None):
+    """One device per pipeline stage over a 'stage' axis.
+
+    Defaults to all local devices (CPU smoke runs force the device count
+    via ``--xla_force_host_platform_device_count``).  Batch stays
+    replicated across stages — microbatches stream through the pipe
+    instead of sharding over a data axis.
+    """
+    n = num_stages if num_stages is not None else len(jax.devices())
+    if len(jax.devices()) < n:
+        raise ValueError(f"pipeline mesh needs {n} devices, have "
+                         f"{len(jax.devices())}")
+    return jax.make_mesh((n,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
 def parallel_config_for(mesh) -> ParallelConfig:
     axes = tuple(mesh.axis_names)
     dp = tuple(a for a in axes if a in ("pod", "data"))

@@ -27,16 +27,22 @@ from repro.config import SPBConfig, TrainConfig
 from repro.configs import get_config, reduced_config
 from repro.data.pipeline import Pipeline
 from repro.engine import SPBEngine, make_policy
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_pipeline_mesh
 
 
 def build_engine(cfg, tcfg, spb_cfg, mesh, *, depth_policy: str = "cycle",
-                 time_budget: float = 0.75, donate: bool = True) -> SPBEngine:
+                 time_budget: float = 0.75, donate: bool = True,
+                 parallelism: str = "spmd",
+                 pipeline_schedule: str = "1f1b") -> SPBEngine:
     """The one construction path every entry point shares."""
-    policy = make_policy(depth_policy, cfg, spb_cfg,
-                         time_budget_frac=time_budget)
-    return SPBEngine(cfg, tcfg, spb_cfg, mesh=mesh, policy=policy,
-                     donate=donate)
+    engine = SPBEngine(cfg, tcfg, spb_cfg, mesh=mesh, donate=donate,
+                       parallelism=parallelism,
+                       pipeline_schedule=pipeline_schedule)
+    # build the policy against engine.spb, which the engine has stamped
+    # with the mesh's pipeline stage count (stage-snapped depth cycles)
+    engine.policy = make_policy(depth_policy, cfg, engine.spb,
+                                time_budget_frac=time_budget)
+    return engine
 
 
 def train(argv=None):
@@ -54,6 +60,14 @@ def train(argv=None):
                     choices=["off", "temporal", "temporal-mb", "spatial"])
     ap.add_argument("--spb-k", type=int, default=4)
     ap.add_argument("--spb-warmup", type=int, default=0)
+    ap.add_argument("--parallelism", default="spmd",
+                    choices=["spmd", "pipeline"],
+                    help="pipeline: run the layer stack as a schedule-"
+                         "driven pipeline over a 'stage' mesh axis")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="pipeline stage count (default: all devices)")
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    choices=["1f1b", "gpipe"])
     ap.add_argument("--depth-policy", default="cycle",
                     choices=["cycle", "costmodel", "hook"],
                     help="who picks the per-step backprop depth")
@@ -86,7 +100,10 @@ def train(argv=None):
                        checkpoint_dir=args.checkpoint_dir, seed=args.seed)
     spb_cfg = SPBConfig(mode=args.spb_mode, k=args.spb_k,
                         warmup_steps=args.spb_warmup)
-    mesh = make_host_mesh()
+    if args.parallelism == "pipeline":
+        mesh = make_pipeline_mesh(args.pipeline_stages or None)
+    else:
+        mesh = make_host_mesh()
     mgr = (CheckpointManager(tcfg.checkpoint_dir, keep=3)
            if tcfg.checkpoint_dir else None)
 
@@ -112,7 +129,9 @@ def _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history):
     engine = build_engine(cfg, tcfg, spb_cfg, mesh,
                           depth_policy=args.depth_policy,
                           time_budget=args.time_budget,
-                          donate=not args.no_donate)
+                          donate=not args.no_donate,
+                          parallelism=args.parallelism,
+                          pipeline_schedule=args.pipeline_schedule)
     engine.init_state(jax.random.key(tcfg.seed))
     start_step = 0
     if args.resume and mgr and mgr.latest_step() is not None:

@@ -240,6 +240,12 @@ def _run_group_train(x, aux, gparams, unit, cfg, positions, *, enc=None,
     return x, aux
 
 
+# Public name: pipeline stages scan their slice of a group with exactly
+# this runner (dist/pipeline/stage.py), so the per-layer math — remat
+# policy included — is shared with the non-pipelined train path.
+run_group_train = _run_group_train
+
+
 def _run_group_cached(x, gparams, gcache, unit, cfg, *, mode, positions=None,
                       pos=None, enc=None):
     def body(carry, xs):

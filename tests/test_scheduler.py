@@ -174,6 +174,60 @@ def test_jigsaw_incremental_index_is_byte_identical(seed, n, machines,
     assert r_new.migrations == r_ref.migrations
 
 
+class _SortedGangMixin:
+    """Reference implementation: the historical full re-sort of the ready
+    job ids every ``place()`` call.  The incremental index in
+    ``_GangScheduler`` must reproduce its placements byte-for-byte."""
+
+    def _order(self, job_ids, jobs, state, now):
+        return sorted(job_ids, key=lambda j: self._key(j, jobs))
+
+
+def _fig4_trace():
+    """The fig4 benchmark workload (quick params, standard jobs)."""
+    return generate_trace(num_jobs=80, seed=1, db=v100_profiles(),
+                          mean_arrival_s=2.0, min_iters=100, max_iters=500,
+                          spb=False)
+
+
+@pytest.mark.parametrize("name", ["tiresias", "gandiva", "fifo"])
+def test_gang_incremental_index_is_byte_identical(name):
+    """The gang baselines' incremental admission index (same treatment
+    JigsawScheduler got) must not change a single placement relative to
+    the historical per-call re-sort — including Tiresias, whose attained-
+    service keys change between calls (lazy re-insort) and tie massively
+    at 0.0 early on (ties keep the stable sort's current-queue order).
+    Pinned on the repo's mini traces and the fig4 benchmark workload."""
+    cls = ALL_SCHEDULERS[name]
+    ref_cls = type(f"_Sorted_{name}", (_SortedGangMixin, cls), {})
+    workloads = [
+        (lambda: _mini_trace(n=20, seed=0, spb=False),
+         dict(num_machines=MACHINES, horizon=5.0)),
+        (lambda: _mini_trace(n=40, seed=3, spb=False, arrival=0.2),
+         dict(num_machines=MACHINES, horizon=5.0)),
+        (_fig4_trace, dict(num_machines=45, horizon=2.0, gamma=2.0)),
+    ]
+    for mk_jobs, kw in workloads:
+        kw = dict(kw, record_schedule=True)
+        r_new = simulate(mk_jobs(), cls(), **kw)
+        r_ref = simulate(mk_jobs(), ref_cls(), **kw)
+        assert r_new.schedule == r_ref.schedule
+        assert r_new.makespan == r_ref.makespan
+        assert r_new.jct == r_ref.jct
+        assert r_new.migrations == r_ref.migrations
+
+
+def test_gang_index_prunes_finished_jobs():
+    """The incremental index must not grow with every job ever admitted:
+    once finished jobs dominate, compaction evicts them (mid-iteration
+    jobs re-insort on return), keeping place() linear in the live set."""
+    jobs = _mini_trace(n=40, seed=3, spb=False, arrival=0.2)
+    sched = FifoScheduler()
+    simulate(jobs, sched, num_machines=MACHINES, horizon=5.0)
+    assert len(sched._index) < 40          # all 40 jobs finished
+    assert len(sched._cur) == len(sched._index)
+
+
 def test_determinism():
     jobs = _mini_trace(n=10, seed=3)
     r1 = simulate(jobs, JigsawScheduler(), num_machines=MACHINES)
