@@ -9,10 +9,11 @@ in place), so the benchmark measures exactly what the trainer runs.
 
 A second row set covers pipeline parallelism (``--pipeline-stages``,
 default 2): GPipe vs 1F1B vs SPB-truncated 1F1B at each snapped depth,
-each row carrying the schedule table's tick count and per-tick bubble
-fraction.  The pipeline rows run in a child process because the stage
-mesh needs ``--xla_force_host_platform_device_count`` set before jax
-initializes.
+each row carrying the schedule table's tick count, per-tick bubble
+fraction, and the runtime's ring-buffer stash watermark (slots + bytes
+per device) — the 1F1B-vs-GPipe memory gap in numbers.  The pipeline
+rows run in a child process because the stage mesh needs
+``--xla_force_host_platform_device_count`` set before jax initializes.
 
   PYTHONPATH=src python benchmarks/bench_spb_step.py [--arch yi-6b]
 """
@@ -97,6 +98,7 @@ def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
     """Pipeline-mode rows: GPipe vs 1F1B at full depth, plus SPB-truncated
     1F1B at every snapped depth of the k-cycle.  Runs on a ``stage`` mesh
     of ``stages`` simulated host devices."""
+    from repro.analysis.roofline import pipeline_stash_bytes
     from repro.dist.pipeline import schedules
 
     cfg = reduced_config(arch)
@@ -104,9 +106,11 @@ def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
                        microbatches=microbatches)
     spb = SPBConfig(mode="temporal", k=k)
     rows = []
+    pipeline_data = 1
     for kind in ("gpipe", "1f1b"):
         engine = SPBEngine(cfg, tcfg, spb, parallelism="pipeline",
                            pipeline_schedule=kind)
+        pipeline_data = engine.pipeline_data
         b = make_batch(cfg, batch, seq)
         keys = engine.depth_keys() if kind == "1f1b" else [None]
         for key in keys:
@@ -114,6 +118,7 @@ def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
             bwd = depth_to_bwd_stages(cfg, key, stages)
             sched = schedules.build(kind, stages, microbatches,
                                     bwd_stages=bwd)
+            plan = schedules.stash_plan(sched)
             row.update({
                 "schedule": kind,
                 "bwd_stages": bwd,
@@ -121,9 +126,17 @@ def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
                 "bubble_fraction": round(
                     schedules.bubble_fraction_of(sched), 4),
                 "max_in_flight": schedules.max_in_flight(sched),
+                # the runtime's ring-buffer watermark: what 1F1B's
+                # bounded stash (vs GPipe's M) costs in bytes per device
+                "stash_slots_act": plan.act_slots,
+                "stash_slots_cot": plan.cot_slots,
+                "stash_bytes": pipeline_stash_bytes(
+                    cfg, batch // microbatches, seq, stages, microbatches,
+                    data_parallel=engine.pipeline_data, sched=sched),
             })
             rows.append(row)
-    return {"stages": stages, "microbatches": microbatches, "rows": rows}
+    return {"stages": stages, "microbatches": microbatches,
+            "pipeline_data": pipeline_data, "rows": rows}
 
 
 def _spawn_pipeline_child(args) -> dict:
@@ -178,7 +191,8 @@ def main():
         print(f"pipe[{r['schedule']:>5}] depth={r['depth']!s:>4} "
               f"bwd_stages={r['bwd_stages']} step={r['step_ms']:8.2f}ms  "
               f"flops={r['hlo_flops']:.3e}  bubble={r['bubble_fraction']} "
-              f"ticks={r['ticks']}")
+              f"ticks={r['ticks']} stash={r['stash_slots_act']}+"
+              f"{r['stash_slots_cot']}={r['stash_bytes']/2**10:.0f}KiB")
     print(f"wrote {args.out}")
 
 

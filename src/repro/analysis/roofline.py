@@ -155,6 +155,52 @@ def pipeline_step_time(step_s: float, num_stages: int,
     return (step_s / num_stages) / max(1.0 - bubble, 1e-9)
 
 
+def pipeline_stash_watermark(num_stages: int, num_microbatches: int, *,
+                             kind: str = "1f1b",
+                             bwd_stages: Optional[int] = None,
+                             sched=None) -> Tuple[int, int]:
+    """(activation, cotangent) stash slots the schedule's runtime
+    allocates — the per-stage memory watermark from the table's
+    :func:`~repro.dist.pipeline.schedules.stash_plan`.  1F1B holds at
+    most ``max_in_flight`` (≤ S, shrinking with SPB truncation) where
+    GPipe holds all M of each.  Pass an already-built ``sched`` (e.g. a
+    hand-edited table) to measure exactly it instead of rebuilding from
+    ``(kind, bwd_stages)``."""
+    from repro.dist.pipeline import schedules
+    if sched is None:
+        sched = schedules.build(kind, num_stages, num_microbatches,
+                                bwd_stages=bwd_stages)
+    elif (sched.num_stages, sched.num_microbatches) != \
+            (num_stages, num_microbatches):
+        raise ValueError(
+            f"sched is {sched.num_stages}x{sched.num_microbatches} but the "
+            f"arguments claim {num_stages}x{num_microbatches}")
+    plan = schedules.stash_plan(sched)
+    return plan.act_slots, plan.cot_slots
+
+
+def pipeline_stash_bytes(cfg: ModelConfig, microbatch: int, seq_len: int,
+                         num_stages: int, num_microbatches: int, *,
+                         kind: str = "1f1b",
+                         bwd_stages: Optional[int] = None,
+                         data_parallel: int = 1, sched=None) -> int:
+    """Bytes of activation+cotangent stash per device for one schedule —
+    the quantity that separates 1F1B from GPipe in memory (and that SPB
+    truncation shrinks further).  ``microbatch`` is the per-microbatch
+    batch size *before* data sharding; each boundary activation is
+    ``(microbatch / data_parallel, seq, d_model)`` in the model dtype."""
+    act, cot = pipeline_stash_watermark(num_stages, num_microbatches,
+                                        kind=kind, bwd_stages=bwd_stages,
+                                        sched=sched)
+    if data_parallel < 1 or microbatch % data_parallel:
+        # keep the analysis honest: the runtime rejects these shapes too
+        raise ValueError(f"microbatch size {microbatch} not divisible by "
+                         f"data_parallel={data_parallel}")
+    elem = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    per_slot = (microbatch // data_parallel) * seq_len * cfg.d_model * elem
+    return (act + cot) * per_slot
+
+
 # ---------------------------------------------------------------------------
 # Roofline table
 # ---------------------------------------------------------------------------

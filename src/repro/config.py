@@ -151,11 +151,16 @@ SHAPES = {
 
 @dataclass(frozen=True)
 class ParallelConfig:
-    """Mesh + axis roles.  dp axes shard batch; tp axis shards weights."""
+    """Mesh + axis roles.  dp axes shard batch; tp axis shards weights;
+    the optional pp axis pipelines the layer stack (a ``(stage, data)``
+    or ``(stage, data, model)`` mesh from ``launch.mesh.
+    make_pipeline_mesh`` — microbatches stream along ``stage`` while
+    their batch dim shards over ``data``)."""
     mesh_shape: Tuple[int, ...] = (16, 16)
     mesh_axes: Tuple[str, ...] = ("data", "model")
     dp_axes: Tuple[str, ...] = ("data",)      # ('pod','data') when multi-pod
     tp_axis: str = "model"
+    pp_axis: Optional[str] = None             # 'stage' on pipeline meshes
     # Remat policy for the per-layer body: 'none'|'full'|'dots'.
     remat: str = "full"
     # Shard long decode KV caches / sequence over these axes.
@@ -172,6 +177,13 @@ class ParallelConfig:
         for a in self.dp_axes:
             n *= sizes[a]
         return n
+
+    @property
+    def num_pp(self) -> int:
+        """Pipeline stage count (1 when the mesh has no pp axis)."""
+        if self.pp_axis is None:
+            return 1
+        return dict(zip(self.mesh_axes, self.mesh_shape))[self.pp_axis]
 
 
 # ---------------------------------------------------------------------------

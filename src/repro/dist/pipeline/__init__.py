@@ -17,5 +17,6 @@ from repro.dist.pipeline import runtime, schedules, stage  # noqa: F401
 from repro.dist.pipeline.runtime import (  # noqa: F401
     pipeline_apply, pipeline_train_grads, run_schedule, sequential_reference)
 from repro.dist.pipeline.schedules import (  # noqa: F401
-    Schedule, WorkItem, bubble_fraction, bubble_fraction_of, build, gpipe,
-    gpipe_forward, max_in_flight, one_f_one_b, spb_truncate, validate)
+    Schedule, StashPlan, WorkItem, bubble_fraction, bubble_fraction_of,
+    build, gpipe, gpipe_forward, max_in_flight, one_f_one_b, render,
+    spb_truncate, stash_plan, validate)

@@ -1,30 +1,40 @@
 """Schedule interpreter: execute a pipeline work table inside ``shard_map``.
 
-One device per stage over the mesh's ``stage`` axis.  The interpreter
-walks the table tick by tick; at every tick each stage runs *its own*
-branch of a ``lax.switch`` on ``axis_index`` — the branch is generated
-from the table column, so a stage traces exactly the work the schedule
-assigns it (an SPB-frozen stage's branches contain no VJP at all, which
-is what the HLO elision tests assert), then activations ``ppermute``
-right and activation-gradients ``ppermute`` left.
+One device per stage over the mesh's ``stage`` axis, optionally times a
+``data`` axis that shards every microbatch's batch dimension (the
+Megatron-style 2-D ``(stage, data)`` layout — each data slice runs the
+same tick program on its shard of the batch and the parameter gradients
+average over ``data`` at the end).  The interpreter walks the table tick
+by tick; at every tick each stage runs *its own* branch of a
+``lax.switch`` on ``axis_index`` — the branch is generated from the
+table column, so a stage traces exactly the work the schedule assigns it
+(an SPB-frozen stage's branches contain no VJP at all, which is what the
+HLO elision tests assert), then activations ``ppermute`` right and
+activation-gradients ``ppermute`` left.
 
-Data flow per stage:
+Data flow per stage — all buffers are **watermark-sized**, not
+per-microbatch (:func:`schedules.stash_plan` assigns ring slots from the
+table's lifetimes; a 1F1B stash holds :func:`schedules.max_in_flight`
+activations, never all M):
 
-* ``act_stash[m]`` — the input activation of microbatch ``m`` (received
-  from the left neighbor; stage 0 reads ``xs`` directly).  Stashed at
-  arrival, consumed by both the forward and the backward of ``m``.
-* ``cot_stash[m]`` — the output cotangent of ``m``: received from the
+* ``act_stash[slot]`` — an input activation between its arrival (from
+  the left neighbor; stage 0 reads ``xs`` directly) and its last read
+  (the backward, or the forward on a frozen stage).  Values consumed in
+  their arrival tick flow straight from the ``ppermute`` receive and
+  never touch the stash.
+* ``cot_stash[slot]`` — an output cotangent between arrival (from the
   right neighbor, or seeded by the loss gradient at the last stage
-  during ``m``'s forward.  Only stages the schedule gives backward work
-  ever stash cotangents.
+  during the forward) and the backward that consumes it.  Only stages
+  the schedule gives backward work ever stash cotangents.
 * ``dw`` — accumulated parameter gradients for this stage's slice;
-  reassembled to the stacked ``(S, ...)`` layout by the ``out_specs``.
+  reassembled to the stacked ``(S, ...)`` layout by the ``out_specs``
+  and averaged over the ``data`` axis when present.
 
-Because send/receive microbatch identities are read from the *static*
-table, every stash index and every ``xs[m]`` gather is a compile-time
-constant; the only runtime dispatch is the switch on the stage index
-(the same idiom as spatial SPB's per-worker ``lax.switch`` in
-``core/spb.py``).
+Because send/receive microbatch identities and stash slots are read from
+the *static* table, every stash index and every ``xs[m]`` gather is a
+compile-time constant; the only runtime dispatch is the switch on the
+stage index (the same idiom as spatial SPB's per-worker ``lax.switch``
+in ``core/spb.py``).
 """
 from __future__ import annotations
 
@@ -44,23 +54,43 @@ def _stage_leading(tree):
     return jax.tree.map(lambda t: t[0], tree)
 
 
+def _mesh_data_axis(mesh, data_axis: Optional[str]) -> Optional[str]:
+    """Resolve the batch-sharding axis: honor an explicit name, else use
+    'data' when the ambient mesh carries one."""
+    names = tuple(getattr(mesh, "axis_names", ()) or ())
+    if data_axis is not None:
+        if data_axis not in names:
+            raise ValueError(f"mesh {names} has no axis {data_axis!r}")
+        return data_axis
+    return "data" if "data" in names else None
+
+
 def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                  loss_fn: Optional[Callable] = None, ys=None,
                  head_params=None, axis_name: str = "stage",
+                 data_axis: Optional[str] = None,
                  capture_input_grads: bool = False) -> Dict[str, Any]:
     """Interpret ``sched`` over the ambient mesh's ``axis_name`` axis.
 
     stage_params: pytree whose leaves are stacked ``(S, ...)`` (one slice
     per stage, sharded over ``axis_name``); ``stage_fn(w, x) -> y`` with
-    ``y.shape == x.shape``; ``xs``: ``(M, mb, ...)`` microbatches
-    (replicated).  With ``loss_fn(head_params, y, ys[m]) -> scalar`` the
-    run is a training pass: returns gradients for the stage params, the
-    (replicated) head params, and — when ``capture_input_grads`` — the
-    cotangents of ``xs`` (for an embedding backward outside the pipe).
+    ``y.shape == x.shape``; ``xs``: ``(M, mb, ...)`` microbatches.  When
+    the mesh has a ``data`` axis (or ``data_axis`` names one), the
+    microbatch dim ``mb`` is sharded over it and gradients/loss average
+    across the data shards.  With ``loss_fn(head_params, y, ys[m]) ->
+    scalar`` the run is a training pass: returns gradients for the stage
+    params, the (replicated) head params, and — when
+    ``capture_input_grads`` — the cotangents of ``xs`` (for an embedding
+    backward outside the pipe).
 
-    Returns a dict with ``outs`` (last-stage outputs, replicated),
-    ``loss`` (mean over microbatches), ``stage_grads`` (stacked
-    ``(S, ...)``), ``head_grads``, ``input_grads``.
+    Returns a dict with ``outs`` (last-stage outputs), ``loss`` (mean
+    over all microbatch elements), ``stage_grads`` (stacked ``(S,
+    ...)``), ``head_grads``, ``input_grads`` (empty unless
+    ``capture_input_grads``), and ``stash_slots`` (the static ``(act,
+    cot)`` ring-buffer sizes actually allocated — the table's watermark,
+    not M).  Note ``outs`` itself is an ``(M, mb, ...)`` result buffer:
+    the *stash* is watermark-sized, the pipe's outputs are still one per
+    microbatch.
     """
     s_, m_ = sched.num_stages, sched.num_microbatches
     train = loss_fn is not None
@@ -71,6 +101,14 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         raise ValueError(f"xs carries {xs.shape[0]} microbatches, schedule "
                          f"expects {m_}")
     head_params = {} if head_params is None else head_params
+    mesh = jax.sharding.get_abstract_mesh()
+    d_axis = _mesh_data_axis(mesh, data_axis)
+    d_size = int(dict(mesh.shape)[d_axis]) if d_axis else 1
+    if d_axis and xs.shape[1] % d_size:
+        raise ValueError(f"microbatch size {xs.shape[1]} not divisible by "
+                         f"data-axis size {d_size}")
+
+    plan = sch.stash_plan(sched)
 
     # static lookup tables: what each stage does / receives per tick
     fwd_at = [[None] * s_ for _ in range(sched.num_ticks)]
@@ -90,10 +128,14 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         idx = lax.axis_index(axis_name)
         mb_shape = xs.shape[1:]
         dt = xs.dtype
-        act_stash = jnp.zeros((m_,) + mb_shape, dt)
-        cot_stash = jnp.zeros((m_,) + mb_shape, dt)
+        act_stash = jnp.zeros((plan.act_slots,) + mb_shape, dt)
+        cot_stash = jnp.zeros((plan.cot_slots,) + mb_shape, dt)
         outs = jnp.zeros((m_,) + mb_shape, dt)
-        in_grads = jnp.zeros((m_,) + mb_shape, dt)
+        # input cotangents are only carried when the caller asked for
+        # them (embedding backward) — otherwise the buffer is empty so
+        # the loop carry does not hold a second M-sized array
+        in_grads = jnp.zeros(
+            ((m_ if capture_input_grads else 0),) + mb_shape, dt)
         dw = jax.tree.map(jnp.zeros_like, w)
         head_dw = jax.tree.map(jnp.zeros_like, head_params)
         loss_acc = jnp.zeros((), jnp.float32)
@@ -109,18 +151,27 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
             if not sched.stage_has_bwd(s):
                 in_cot_m = None             # frozen stages never stash cots
             fm, bm = fwd_at[t][s], bwd_at[t][s]
+            in_act_slot = (plan.act_slot.get((s, in_act_m))
+                           if in_act_m is not None else None)
+            in_cot_slot = (plan.cot_slot.get((s, in_cot_m))
+                           if in_cot_m is not None else None)
 
             def branch(carry):
                 (recv_act, recv_cot, act_stash, cot_stash, outs, in_grads,
                  dw, head_dw, loss_acc) = carry
-                if in_act_m is not None:
-                    act_stash = act_stash.at[in_act_m].set(recv_act)
-                if in_cot_m is not None:
-                    cot_stash = cot_stash.at[in_cot_m].set(recv_cot)
+                if in_act_slot is not None:
+                    act_stash = act_stash.at[in_act_slot].set(recv_act)
+                if in_cot_slot is not None:
+                    cot_stash = cot_stash.at[in_cot_slot].set(recv_cot)
                 y_send = jnp.zeros(mb_shape, dt)
                 dx_send = jnp.zeros(mb_shape, dt)
                 if fm is not None:
-                    x_in = xs[fm] if first else act_stash[fm]
+                    if first:
+                        x_in = xs[fm]
+                    elif in_act_m == fm:    # arrived this tick: read the
+                        x_in = recv_act     # wire, not the stash
+                    else:
+                        x_in = act_stash[plan.act_slot[(s, fm)]]
                     y = stage_fn(w, x_in)
                     y_send = y
                     if last:
@@ -132,12 +183,20 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                             loss_acc = loss_acc + val.astype(jnp.float32)
                             head_dw = jax.tree.map(
                                 lambda a, g: a + g * inv_m, head_dw, g_hp)
-                            cot_stash = cot_stash.at[fm].set(
-                                (g_y * inv_m).astype(dt))
+                            if sched.stage_has_bwd(s):
+                                cot_stash = cot_stash.at[
+                                    plan.cot_slot[(s, fm)]].set(
+                                    (g_y * inv_m).astype(dt))
                 if bm is not None:
                     with jax.named_scope(f"pipeline_bwd_stage{s}"):
-                        x_b = xs[bm] if first else act_stash[bm]
-                        dy = cot_stash[bm]
+                        if first:
+                            x_b = xs[bm]
+                        else:
+                            x_b = act_stash[plan.act_slot[(s, bm)]]
+                        if in_cot_m == bm and (s, bm) not in plan.cot_slot:
+                            dy = recv_cot   # consumed on arrival
+                        else:
+                            dy = cot_stash[plan.cot_slot[(s, bm)]]
                         if need_dx[s]:
                             _, vjp_fn = jax.vjp(
                                 lambda ww, xx: stage_fn(ww, xx), w, x_b)
@@ -175,19 +234,30 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         loss = lax.psum(loss_acc, axis_name) * inv_m
         in_grads = lax.psum(in_grads, axis_name)
         head_dw = lax.psum(head_dw, axis_name)
+        if d_axis is not None:
+            # each data shard computed the mean loss over its slice; the
+            # global loss is the mean of shard means, so params average
+            # over 'data' and the (still-sharded) input cotangents scale
+            dw = lax.pmean(dw, d_axis)
+            head_dw = lax.pmean(head_dw, d_axis)
+            loss = lax.pmean(loss, d_axis)
+            in_grads = in_grads * (1.0 / d_size)
         dw = jax.tree.map(lambda t_: t_[None], dw)
         return outs, loss, dw, head_dw, in_grads
 
-    mesh = jax.sharding.get_abstract_mesh()
+    batch_spec = P(None, d_axis) if d_axis else P()
+    # the ys placeholder for forward-only runs stays minimal (and
+    # replicated — only real labels shard over the data axis)
+    ys_spec = batch_spec if ys is not None else P()
+    ys_in = ys if ys is not None else jnp.zeros((m_, 1), xs.dtype)
     outs, loss, stage_grads, head_grads, input_grads = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis_name), P(), P(), P()),
-        out_specs=(P(), P(), P(axis_name), P(), P()),
-        check_vma=False)(stage_params, xs,
-                         ys if ys is not None else jnp.zeros((m_, 1)),
-                         head_params)
+        in_specs=(P(axis_name), batch_spec, ys_spec, P()),
+        out_specs=(batch_spec, P(), P(axis_name), P(), batch_spec),
+        check_vma=False)(stage_params, xs, ys_in, head_params)
     return {"outs": outs, "loss": loss, "stage_grads": stage_grads,
-            "head_grads": head_grads, "input_grads": input_grads}
+            "head_grads": head_grads, "input_grads": input_grads,
+            "stash_slots": (plan.act_slots, plan.cot_slots)}
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +269,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, xs,
     """GPipe forward over the ambient mesh's ``axis_name`` axis.
 
     stage_params: (S, ...) stacked weights, sharded one stage per device;
-    xs: (M, mb, ...) microbatches (replicated).  Returns (M, mb, ...)
-    outputs of the final stage, replicated.  (Interprets the
+    xs: (M, mb, ...) microbatches (replicated over ``stage``, sharded
+    over ``data`` when the mesh has that axis).  Returns (M, mb, ...)
+    outputs of the final stage.  (Interprets the
     :func:`schedules.gpipe_forward` table — the pre-refactor hand-rolled
     fill/drain loop, now one schedule among several.)
     """
@@ -213,18 +284,27 @@ def pipeline_apply(stage_fn: Callable, stage_params, xs,
 def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
                          xs, ys, loss_fn: Callable, *, head_params=None,
                          axis_name: str = "stage",
+                         data_axis: Optional[str] = None,
                          capture_input_grads: bool = False
                          ) -> Dict[str, Any]:
     """One pipelined forward+backward pass per the schedule table.
 
     Returns ``{'loss', 'stage_grads', 'head_grads', 'input_grads',
-    'outs'}`` where ``loss`` is the mean of ``loss_fn(head_params,
-    y_m, ys[m])`` over microbatches and the gradients are exact
-    d(loss)/d(param) for every stage the schedule runs backward on
-    (frozen stages report zeros — their VJPs are never traced).
+    'outs', 'stash_slots'}`` where ``loss`` is the mean of
+    ``loss_fn(head_params, y_m, ys[m])`` over microbatches and the
+    gradients are exact d(loss)/d(param) for every stage the schedule
+    runs backward on (frozen stages report zeros — their VJPs are never
+    traced).  On a ``(stage, data)`` mesh the microbatch dim shards over
+    ``data`` and gradients/loss are the data-parallel averages.
+
+    The activation/cotangent stashes are ring buffers sized by
+    :func:`schedules.stash_plan` — ``stash_slots`` in the result records
+    the allocation, e.g. 1F1B at ``(S=4, M=8)`` stashes 4 activations
+    where GPipe would stash all 8.
     """
     return run_schedule(sched, stage_fn, stage_params, xs, loss_fn=loss_fn,
                         ys=ys, head_params=head_params, axis_name=axis_name,
+                        data_axis=data_axis,
                         capture_input_grads=capture_input_grads)
 
 

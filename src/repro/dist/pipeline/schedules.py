@@ -120,7 +120,19 @@ def one_f_one_b(num_stages: int, num_microbatches: int, *,
     ``min(S-1-s, M)`` forwards, then prefer backward whenever one is
     ready.  With ``bwd_stages < S`` the frozen prefix never waits on
     cotangents, so its forwards pack back-to-back (the SPB win shows up
-    directly as a shorter table)."""
+    directly as a shorter table) — but each frozen stage caps its lead
+    over its right neighbor at one microbatch, so the first live stage
+    never buffers more than its 1F1B in-flight cap (the stash watermark
+    stays at ``bwd_stages``, it does not creep back toward M).
+
+    >>> sched = one_f_one_b(2, 4)
+    >>> (sched.num_stages, sched.num_microbatches, sched.bwd_stages)
+    (2, 4, 2)
+    >>> max_in_flight(sched)              # bounded stash, not M=4
+    2
+    >>> max_in_flight(one_f_one_b(4, 8, bwd_stages=1))
+    1
+    """
     s_, m_ = num_stages, num_microbatches
     b_ = s_ if bwd_stages is None else bwd_stages
     _check_bwd_stages(s_, b_)
@@ -144,8 +156,14 @@ def one_f_one_b(num_stages: int, num_microbatches: int, *,
                 if s >= first_bwd:
                     # canonical 1F1B in-flight cap: beyond warmup, each
                     # forward must be paid for by a completed backward
-                    # (frozen stages free-run — the SPB packing win)
                     return issued_fwd[s] < warmup[s] + next_bwd[s] + 1
+                if b_ > 0:
+                    # frozen stage: at most one microbatch ahead of the
+                    # right neighbor's forward issue — backpressure that
+                    # keeps the first live stage's arrival queue at its
+                    # in-flight cap (free-running would pile ~M stashed
+                    # activations there, forfeiting the 1F1B watermark)
+                    return issued_fwd[s] < next_fwd[s + 1] + 1
                 return True
 
             def bwd_ready():
@@ -188,7 +206,19 @@ BUILDERS = {"gpipe": gpipe, "1f1b": one_f_one_b}
 
 def build(kind: str, num_stages: int, num_microbatches: int, *,
           bwd_stages: Optional[int] = None) -> Schedule:
-    """Builder registry: 'gpipe' | '1f1b' (+ optional SPB truncation)."""
+    """Builder registry: 'gpipe' | '1f1b' (+ optional SPB truncation).
+
+    >>> sched = build("1f1b", 2, 4)
+    >>> sched.name, sched.num_ticks
+    ('1f1b', 10)
+    >>> trunc = build("1f1b", 4, 8, bwd_stages=2)
+    >>> trunc.first_bwd_stage          # stages 0-1 are frozen
+    2
+    >>> build("magic", 2, 4)
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown pipeline schedule 'magic'; known: ['1f1b', 'gpipe']
+    """
     if kind not in BUILDERS:
         raise ValueError(f"unknown pipeline schedule {kind!r}; "
                          f"known: {sorted(BUILDERS)}")
@@ -292,6 +322,27 @@ def validate(sched: Schedule) -> Schedule:
     return sched
 
 
+def render(sched: Schedule) -> str:
+    """ASCII view of the per-tick work table (``F``/``B`` = forward /
+    backward of that microbatch, ``.`` = idle slot):
+
+    >>> print(render(one_f_one_b(2, 4)))
+    tick     0  1  2  3  4  5  6  7  8  9
+    stage 0 F0 F1  . B0 F2 B1 F3 B2  . B3
+    stage 1  . F0 B0 F1 B1 F2 B2 F3 B3  .
+    """
+    w = max(3, len(str(sched.num_microbatches - 1)) + 2)
+    lines = ["tick   " + "".join(f"{t:>{w}}" for t in range(sched.num_ticks))]
+    for s in range(sched.num_stages):
+        cells = []
+        for row in sched.ticks:
+            it = row[s]
+            cells.append("." if it is None else
+                         f"{'F' if it.kind == FWD else 'B'}{it.microbatch}")
+        lines.append(f"stage {s}" + "".join(f"{c:>{w}}" for c in cells))
+    return "\n".join(line.rstrip() for line in lines)
+
+
 # ---------------------------------------------------------------------------
 # Table-derived analyses
 # ---------------------------------------------------------------------------
@@ -332,7 +383,11 @@ def max_in_flight(sched: Schedule) -> int:
     stage — the memory watermark that separates 1F1B (≤ S) from GPipe
     (= M).  Frozen stages hold nothing: their forward consumes its input
     in the same tick and no backward will ever read it, so SPB
-    truncation shrinks this watermark along with the compute."""
+    truncation shrinks this watermark along with the compute.
+
+    >>> max_in_flight(one_f_one_b(4, 8)), max_in_flight(gpipe(4, 8))
+    (4, 8)
+    """
     peak = 0
     live = [0] * sched.num_stages
     for _, it in sched.items():
@@ -344,3 +399,101 @@ def max_in_flight(sched: Schedule) -> int:
         else:
             live[it.stage] -= 1
     return peak
+
+
+# ---------------------------------------------------------------------------
+# Stash planning: watermark-sized ring slots for the runtime's buffers
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StashPlan:
+    """Static slot assignment for the runtime's activation / cotangent
+    stashes, derived purely from the table.
+
+    ``act_slot[(stage, microbatch)]`` is the ring slot holding that
+    microbatch's *input activation* from its arrival (one tick after the
+    left neighbor's forward) to its last read (the backward, or the
+    forward on a frozen stage); ``cot_slot`` likewise holds the *output
+    cotangent* from arrival/seeding to the backward that consumes it.
+    Entries are absent when no buffering is needed: stage 0 reads ``xs``
+    directly, and a value consumed in its arrival tick flows straight
+    from the ``ppermute`` receive.
+
+    ``act_slots`` / ``cot_slots`` are the buffer sizes — the schedule's
+    true memory watermark.  For the shipped 1F1B tables ``act_slots ==``
+    :func:`max_in_flight` (never M); GPipe needs all M of both.
+    """
+    act_slots: int
+    cot_slots: int
+    act_slot: Dict[Tuple[int, int], int]
+    cot_slot: Dict[Tuple[int, int], int]
+
+
+def _assign_slots(intervals) -> Tuple[int, Dict[Tuple[int, int], int]]:
+    """Greedy interval coloring, per stage: ``intervals`` is a list of
+    ``(stage, microbatch, start_tick, end_tick)`` lifetimes; a slot frees
+    strictly after its end tick (arrival writes happen before the same
+    tick's reads, so same-tick reuse would clobber)."""
+    by_stage: Dict[int, list] = {}
+    for s, m, a, b in intervals:
+        by_stage.setdefault(s, []).append((a, b, m))
+    peak = 0
+    assignment: Dict[Tuple[int, int], int] = {}
+    for s, items in by_stage.items():
+        items.sort()
+        slot_end: list = []                 # slot index -> busy-until tick
+        for a, b, m in items:
+            for i, e in enumerate(slot_end):
+                if e < a:
+                    slot_end[i] = b
+                    assignment[(s, m)] = i
+                    break
+            else:
+                assignment[(s, m)] = len(slot_end)
+                slot_end.append(b)
+        peak = max(peak, len(slot_end))
+    return peak, assignment
+
+
+def stash_plan(sched: Schedule) -> StashPlan:
+    """Compute the watermark-sized stash layout for ``sched``.
+
+    The runtime allocates exactly ``act_slots`` / ``cot_slots`` buffer
+    entries (instead of one per microbatch) and indexes them with the
+    compile-time-constant slots planned here — this is what realizes
+    1F1B's bounded-memory advantage the table already encodes.
+
+    >>> plan = stash_plan(one_f_one_b(4, 8))
+    >>> plan.act_slots == max_in_flight(one_f_one_b(4, 8)) == 4
+    True
+    >>> plan.cot_slots                # 1F1B consumes cotangents on arrival
+    1
+    >>> gp = stash_plan(gpipe(4, 8))
+    >>> (gp.act_slots, gp.cot_slots)  # GPipe stashes every microbatch
+    (8, 8)
+    """
+    s_, m_ = sched.num_stages, sched.num_microbatches
+    fwd: Dict[Tuple[int, int], int] = {}
+    bwd: Dict[Tuple[int, int], int] = {}
+    for t, it in sched.items():
+        (fwd if it.kind == FWD else bwd)[(it.microbatch, it.stage)] = t
+    act, cot = [], []
+    for m in range(m_):
+        for s in range(s_):
+            if s > 0:                       # stage 0 reads xs directly
+                arrive = fwd[(m, s - 1)] + 1
+                if sched.stage_has_bwd(s):
+                    act.append((s, m, arrive, bwd[(m, s)]))
+                elif fwd[(m, s)] > arrive:  # frozen + consumed later
+                    act.append((s, m, arrive, fwd[(m, s)]))
+            if sched.stage_has_bwd(s):
+                # cotangent: seeded during the forward at the last stage,
+                # received one tick after the right neighbor's backward
+                # elsewhere; consumed by this stage's backward
+                c_start = (fwd[(m, s)] if s == s_ - 1
+                           else bwd[(m, s + 1)] + 1)
+                if s == s_ - 1 or bwd[(m, s)] > c_start:
+                    cot.append((s, m, c_start, bwd[(m, s)]))
+    act_n, act_map = _assign_slots(act)
+    cot_n, cot_map = _assign_slots(cot)
+    return StashPlan(act_n, cot_n, act_map, cot_map)

@@ -10,10 +10,19 @@ its own ``count/S`` layers, placed by the same logical-rule table as
 every other tensor (``dist/sharding.py``; the ``stage`` role).
 
 The embedding and the head (final norm + unembedding) are not part of
-the repeating unit and run *outside* the pipelined region, replicated:
-the train step embeds tokens before feeding microbatches in, and the
-last stage's loss closure (:func:`make_head_loss`) owns the head — its
-gradients come back through the schedule runtime's ``head_grads``.
+the repeating unit and run *outside* the pipelined region, replicated
+across stages: the train step embeds tokens before feeding microbatches
+in, and the last stage's loss closure (:func:`make_head_loss`) owns the
+head — its gradients come back through the schedule runtime's
+``head_grads``.
+
+On a 2-D ``(stage, data)`` mesh nothing here changes shape: the stacked
+``(S, ...)`` stage params shard over ``stage`` and replicate over
+``data`` (their optimizer moments ZeRO-1-shard over ``data`` — see
+``dist/sharding.pipeline_state_pspec``), while :func:`embed_tokens`'s
+``batch`` role lands the token batch on ``data`` so the schedule
+runtime receives microbatches already sharded the way its ``in_specs``
+demand.
 """
 from __future__ import annotations
 

@@ -218,6 +218,17 @@ def cache_pspec(cache_shapes: Any, mesh=None) -> Any:
 # Train-state PartitionSpecs (ZeRO-1 optimizer-state sharding)
 # ---------------------------------------------------------------------------
 
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    """axis name -> size, for concrete and abstract meshes alike
+    (AbstractMesh carries no devices; duck-typed stubs may carry no
+    ``shape``)."""
+    shape = getattr(mesh, "shape", None)
+    if shape is not None:
+        return {str(k): int(v) for k, v in dict(shape).items()}
+    return dict(zip(mesh.axis_names,
+                    (int(d) for d in mesh.devices.shape)))
+
+
 def zero1_spec(spec: P, shape, mesh) -> P:
     """ZeRO-1: additionally shard an optimizer-state leaf over the DP axes.
 
@@ -225,12 +236,16 @@ def zero1_spec(spec: P, shape, mesh) -> P:
     dim is chosen (not the first): sharding the biggest dim keeps every
     shard's slice contiguous-ish and maximizes the memory saved per leaf —
     e.g. a (heads, d_model, d_head) projection shards d_model, not heads.
+    Dims already claimed by another axis (tensor-parallel ``model``, the
+    pipeline ``stage`` leading dim) are left alone, so the rule composes
+    with :func:`pipeline_state_pspec`: per-stage moment slices shard over
+    ``data`` *within* their stage.
     """
     dp = [a for a in ("pod", "data") if a in mesh.axis_names]
     if not dp:
         return spec
     dp_size = 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = _mesh_sizes(mesh)
     for a in dp:
         dp_size *= sizes[a]
     entries = list(spec) + [None] * (len(shape) - len(spec))
@@ -288,19 +303,36 @@ def pipeline_state_pspec(state_shapes: Any, mesh=None, *,
     axis — each device holds exactly its stage's slice of weights,
     moments and master copies.  Everything else (embedding, head, step)
     stays on the normal rule table, replicated across stages.
+
+    On a 2-D ``(stage, data)`` mesh the two compositions layer cleanly:
+    the ``stage`` rule claims the leading layer dim *first*, then ZeRO-1
+    (``zero1=True``) shards each optimizer moment over ``data`` on the
+    largest remaining dim — params stay replicated across ``data``
+    within a stage while their moments are data-sharded, exactly the
+    Megatron + ZeRO-1 layout.
     """
     if mesh is None:
         mesh = _ambient_mesh()
-    base = state_pspec(state_shapes, mesh=mesh, zero1=zero1)
     stage_spec = spec_for(("stage",), mesh=mesh)
     if not len(stage_spec):                # no stage axis on this mesh
-        return base
+        return state_pspec(state_shapes, mesh=mesh, zero1=zero1)
     (stage_axes,) = stage_spec
+    base = state_pspec(state_shapes, mesh=mesh, zero1=False)
 
     def add(path, spec, leaf):
         if "groups" in _path_keys(path):
             return _with_stage_dim0(spec, leaf, stage_axes)
         return spec
 
-    return jax.tree_util.tree_map_with_path(
+    out = jax.tree_util.tree_map_with_path(
         add, base, state_shapes, is_leaf=lambda x: isinstance(x, P))
+    if zero1 and mesh is not None:
+        # ZeRO-1 runs AFTER the stage rule so the leading layer dim is
+        # already claimed: moments shard over the DP axes on another dim
+        is_p = lambda x: isinstance(x, P)   # noqa: E731
+        out["opt"] = {
+            key: jax.tree.map(
+                lambda s, l: zero1_spec(s, l.shape, mesh), sub,
+                state_shapes["opt"][key], is_leaf=is_p)
+            for key, sub in out["opt"].items()}
+    return out

@@ -259,6 +259,12 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     steps' ``stop_gradient`` elision).  Same signature as the temporal /
     spatial steps, so ``SPBEngine``'s per-depth table, donation and AOT
     cache apply unchanged.
+
+    On a ``(stage, data)`` mesh the interpreter additionally shards each
+    microbatch's batch dim over ``data`` (the batch must divide by
+    ``microbatches * data_size``) and data-averages gradients; the
+    activation/cotangent stashes are ring buffers sized to the table's
+    ``stash_plan`` watermark, not the microbatch count.
     """
     from repro.config import depth_to_bwd_stages
     from repro.dist import pipeline as pp

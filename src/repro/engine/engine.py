@@ -40,7 +40,7 @@ from repro.dist import sharding as shd
 from repro.dist import steps as steps_lib
 from repro.engine import aot
 from repro.engine.policies import DepthPolicy, make_policy
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, parallel_config_for
 
 State = Dict[str, Any]
 
@@ -48,9 +48,20 @@ State = Dict[str, Any]
 class SPBEngine:
     """A training session: mesh + state + depth policy + step table.
 
+    Constructing a session builds the per-depth step table (tracing and
+    compilation stay lazy) and derives state shapes/shardings once:
+
+    >>> from repro.config import SPBConfig, TrainConfig
+    >>> from repro.configs import reduced_config
+    >>> engine = SPBEngine(reduced_config("yi-6b"), TrainConfig(),
+    ...                    SPBConfig(mode="temporal", k=2))
+    >>> engine.depth_keys()           # full backprop + the k-cycle depths
+    [None, 2, 4]
+    >>> engine.resolve_depth(3)       # depths snap UP, never less backprop
+    3
+
     Typical use::
 
-        engine = SPBEngine(cfg, tcfg, spb_cfg)
         engine.init_state(jax.random.key(0))
         for step in range(tcfg.num_steps):
             metrics = engine.train_step(pipe.get_batch(step), step)
@@ -60,6 +71,13 @@ class SPBEngine:
         specs = engine.batch_specs_like(sample_batch)
         engine.compile_table(specs)
         engine.export_aot(cache_dir, specs)     # other processes import
+
+    Pipeline sessions (``parallelism="pipeline"``) run the same surface
+    over a ``(stage, data)`` mesh from ``launch.mesh.make_pipeline_mesh``
+    — the engine stamps ``spb.pipeline_stages`` from the mesh so depth
+    policies emit stage-snapped depths, shards microbatches over ``data``
+    inside the schedule interpreter, and keys the AOT cache on the
+    ``(parallelism, schedule, data)`` extras on top of the mesh topology.
     """
 
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
@@ -79,12 +97,17 @@ class SPBEngine:
         if parallelism == "pipeline":
             from repro.launch.mesh import make_pipeline_mesh
             self.mesh = mesh if mesh is not None else make_pipeline_mesh()
-            if "stage" not in self.mesh.axis_names:
+            pcfg = parallel_config_for(self.mesh)
+            if pcfg.pp_axis is None:
                 raise ValueError("pipeline parallelism needs a mesh with a "
                                  "'stage' axis (launch.mesh."
                                  "make_pipeline_mesh)")
-            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
-            self.pipeline_stages = sizes["stage"]
+            self.parallel = pcfg
+            self.pipeline_stages = pcfg.num_pp
+            # the composable data axis: microbatches shard over it inside
+            # the schedule interpreter, ZeRO-1 moments shard over it per
+            # stage; 1 when the session mesh is stage-only
+            self.pipeline_data = pcfg.num_dp
             # stage-snap the whole depth machinery (schedules, policies,
             # LR-rescale contributors) to what the pipeline can freeze
             if self.spb.pipeline_stages != self.pipeline_stages:
@@ -92,7 +115,9 @@ class SPBEngine:
                     self.spb, pipeline_stages=self.pipeline_stages)
         else:
             self.mesh = mesh if mesh is not None else make_host_mesh()
+            self.parallel = parallel_config_for(self.mesh)
             self.pipeline_stages = 0
+            self.pipeline_data = 0
         self.donate = donate
         self.zero1 = zero1
         self.policy = policy or make_policy("cycle", cfg, self.spb)
@@ -291,7 +316,8 @@ class SPBEngine:
         root = Path(cache_root) if cache_root else aot.DEFAULT_CACHE
         extra = (None if self.parallelism == "spmd" else
                  {"parallelism": self.parallelism,
-                  "pipeline_schedule": self.pipeline_schedule})
+                  "pipeline_schedule": self.pipeline_schedule,
+                  "pipeline_data": self.pipeline_data})
         return root / aot.cache_key(self.cfg, self.tcfg, self.spb, self.mesh,
                                     batch_specs, zero1=self.zero1,
                                     donate=self.donate, extra=extra)

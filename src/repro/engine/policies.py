@@ -69,7 +69,17 @@ class FullBackpropPolicy(_ObserveMixin):
 
 
 class CyclePolicy(_ObserveMixin):
-    """The temporal k-cycle with warmup, backed by TemporalSchedule."""
+    """The temporal k-cycle with warmup, backed by TemporalSchedule.
+
+    The deepest level leads the cycle so every layer trains from step 0:
+
+    >>> from repro.config import SPBConfig
+    >>> from repro.configs import reduced_config
+    >>> pol = CyclePolicy(reduced_config("yi-6b"),
+    ...                   SPBConfig(mode="temporal", k=2))
+    >>> [pol.depth_for_step(s) for s in range(4)]
+    [4, 2, 4, 2]
+    """
 
     def __init__(self, cfg: ModelConfig, spb: SPBConfig,
                  schedule: Optional[spb_lib.TemporalSchedule] = None):
@@ -126,7 +136,19 @@ class SchedulerHookPolicy(_ObserveMixin):
     per-worker backprop fraction) and the engine executes that depth on
     the next iteration.  Requests are sticky until replaced; with no
     request the policy falls back to ``default`` (full backprop unless a
-    fallback schedule is given)."""
+    fallback schedule is given).
+
+    >>> from repro.config import SPBConfig
+    >>> from repro.configs import reduced_config
+    >>> hook = SchedulerHookPolicy(reduced_config("yi-6b"),
+    ...                            SPBConfig(mode="temporal", k=2))
+    >>> hook.depth_for_step(0) is None       # no request: full backprop
+    True
+    >>> hook.request_fraction(0.5)           # worker 1 of 2 -> 2 layers
+    2
+    >>> hook.depth_for_step(1)               # sticky until replaced
+    2
+    """
 
     def __init__(self, cfg: ModelConfig, spb: SPBConfig,
                  default: Optional[DepthPolicy] = None):

@@ -35,24 +35,40 @@ def make_host_mesh():
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
-def make_pipeline_mesh(num_stages: Optional[int] = None):
-    """One device per pipeline stage over a 'stage' axis.
+def make_pipeline_mesh(num_stages: Optional[int] = None, *,
+                       data_parallel: int = 1, model_parallel: int = 1):
+    """A composable pipeline mesh: ``(stage, data)`` — optionally
+    ``(stage, data, model)`` when ``model_parallel > 1``.
 
-    Defaults to all local devices (CPU smoke runs force the device count
-    via ``--xla_force_host_platform_device_count``).  Batch stays
-    replicated across stages — microbatches stream through the pipe
-    instead of sharding over a data axis.
+    ``num_stages`` defaults to whatever the local devices allow after
+    the data/model factors (CPU smoke runs force the device count via
+    ``--xla_force_host_platform_device_count``).  Microbatches stream
+    through the pipe along ``stage`` while each microbatch's batch dim
+    shards over ``data`` (and per-stage optimizer moments ZeRO-1-shard
+    over ``data`` — see ``dist/sharding.pipeline_state_pspec``);
+    ``model`` carries the usual tensor-parallel roles.
     """
-    n = num_stages if num_stages is not None else len(jax.devices())
-    if len(jax.devices()) < n:
-        raise ValueError(f"pipeline mesh needs {n} devices, have "
-                         f"{len(jax.devices())}")
-    return jax.make_mesh((n,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if data_parallel < 1 or model_parallel < 1:
+        raise ValueError(f"data_parallel={data_parallel} / "
+                         f"model_parallel={model_parallel} must be >= 1")
+    ndev = len(jax.devices())
+    inner = data_parallel * model_parallel
+    n = num_stages if num_stages is not None else max(1, ndev // inner)
+    if ndev < n * inner:
+        raise ValueError(f"pipeline mesh needs {n}x{data_parallel}"
+                         f"{'x' + str(model_parallel) if model_parallel > 1 else ''}"
+                         f" = {n * inner} devices, have {ndev}")
+    if model_parallel > 1:
+        return jax.make_mesh((n, data_parallel, model_parallel),
+                             ("stage", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((n, data_parallel), ("stage", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
 def parallel_config_for(mesh) -> ParallelConfig:
     axes = tuple(mesh.axis_names)
     dp = tuple(a for a in axes if a in ("pod", "data"))
     return ParallelConfig(mesh_shape=tuple(mesh.devices.shape),
-                          mesh_axes=axes, dp_axes=dp, tp_axis="model")
+                          mesh_axes=axes, dp_axes=dp, tp_axis="model",
+                          pp_axis="stage" if "stage" in axes else None)

@@ -65,9 +65,15 @@ def train(argv=None):
                     help="pipeline: run the layer stack as a schedule-"
                          "driven pipeline over a 'stage' mesh axis")
     ap.add_argument("--pipeline-stages", type=int, default=0,
-                    help="pipeline stage count (default: all devices)")
+                    help="pipeline stage count (default: all devices "
+                         "divided by the data/model factors)")
     ap.add_argument("--pipeline-schedule", default="1f1b",
                     choices=["1f1b", "gpipe"])
+    ap.add_argument("--pipeline-data-parallel", type=int, default=1,
+                    help="size of the pipeline mesh's 'data' axis: "
+                         "microbatches shard their batch dim over it and "
+                         "per-stage optimizer moments ZeRO-1-shard over it "
+                         "(total devices = stages x data)")
     ap.add_argument("--depth-policy", default="cycle",
                     choices=["cycle", "costmodel", "hook"],
                     help="who picks the per-step backprop depth")
@@ -101,7 +107,8 @@ def train(argv=None):
     spb_cfg = SPBConfig(mode=args.spb_mode, k=args.spb_k,
                         warmup_steps=args.spb_warmup)
     if args.parallelism == "pipeline":
-        mesh = make_pipeline_mesh(args.pipeline_stages or None)
+        mesh = make_pipeline_mesh(args.pipeline_stages or None,
+                                  data_parallel=args.pipeline_data_parallel)
     else:
         mesh = make_host_mesh()
     mgr = (CheckpointManager(tcfg.checkpoint_dir, keep=3)

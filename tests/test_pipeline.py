@@ -119,6 +119,58 @@ def test_one_f_one_b_bounds_in_flight():
         schedules.one_f_one_b(4, 8, bwd_stages=1)) == 1
 
 
+def test_stash_plan_sizes_buffers_to_the_watermark():
+    """The runtime's ring-buffer plan allocates exactly max_in_flight
+    activation slots for 1F1B (never M), one cotangent slot (consumed on
+    arrival), and M of each for GPipe."""
+    for s, m in [(2, 4), (2, 8), (4, 8), (8, 16)]:
+        sched = schedules.one_f_one_b(s, m)
+        plan = schedules.stash_plan(sched)
+        assert plan.act_slots == schedules.max_in_flight(sched) < m
+        assert plan.cot_slots == 1
+        for b in range(1, s):
+            t = schedules.one_f_one_b(s, m, bwd_stages=b)
+            tp = schedules.stash_plan(t)
+            assert tp.act_slots == schedules.max_in_flight(t) == b
+    gp = schedules.stash_plan(schedules.gpipe(4, 8))
+    assert (gp.act_slots, gp.cot_slots) == (8, 8)
+    # forward-only tables buffer nothing: arrivals are consumed in-tick
+    assert schedules.stash_plan(schedules.gpipe_forward(4, 8)).act_slots == 0
+
+
+def test_stash_plan_slots_never_overlap_in_time():
+    """Two lifetimes sharing a (stage, slot) must be disjoint with a
+    strictly-later reuse (arrival writes precede same-tick reads)."""
+    for sched in (schedules.one_f_one_b(4, 8),
+                  schedules.one_f_one_b(4, 8, bwd_stages=2),
+                  schedules.gpipe(4, 8), schedules.one_f_one_b(3, 5)):
+        plan = schedules.stash_plan(sched)
+        fwd, bwd = {}, {}
+        for t, it in sched.items():
+            (fwd if it.kind == schedules.FWD else bwd)[
+                (it.microbatch, it.stage)] = t
+        spans = {}
+        for (s, m), slot in plan.act_slot.items():
+            start = fwd[(m, s - 1)] + 1
+            end = bwd[(m, s)] if sched.stage_has_bwd(s) else fwd[(m, s)]
+            spans.setdefault((s, slot), []).append((start, end))
+        for key, ivs in spans.items():
+            ivs.sort()
+            for (a1, b1), (a2, b2) in zip(ivs, ivs[1:]):
+                assert a2 > b1, (key, ivs)
+
+
+def test_frozen_prefix_backpressure_keeps_tables_short():
+    """The frozen-stage lead cap must not cost ticks: a truncated 1F1B
+    table stays strictly shorter than the full one, while its stash
+    watermark equals bwd_stages instead of creeping toward M."""
+    full = schedules.one_f_one_b(4, 16)
+    for b in (1, 2, 3):
+        t = schedules.one_f_one_b(4, 16, bwd_stages=b)
+        assert t.num_ticks < full.num_ticks
+        assert schedules.stash_plan(t).act_slots == b
+
+
 def test_roofline_pipeline_bubble_from_table():
     from repro.analysis.roofline import (pipeline_bubble_fraction,
                                          pipeline_step_time)
@@ -271,6 +323,97 @@ def test_1f1b_gradients_match_sequential_autodiff():
     {(2,2),(2,8),(4,4)}; truncated schedules zero exactly the frozen
     stages and leave live-stage gradients untouched."""
     _run_sub(_GRAD_SCRIPT, 4, "ALL_GRADS_OK")
+
+
+_MESH2D_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.pipeline import (pipeline_train_grads, schedules,
+                                     sequential_reference)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    def loss_fn(hp, y, t):
+        return jnp.mean((y - t) ** 2)
+
+    S, M, mb, D = 2, 4, 4, 16
+    params = jax.random.normal(jax.random.key(0), (S, D, D)) / jnp.sqrt(D)
+    xs = jax.random.normal(jax.random.key(1), (M, mb, D))
+    ts = jax.random.normal(jax.random.key(2), (M, mb, D))
+
+    def ref_loss(p):
+        ys = sequential_reference(stage_fn, p, xs)
+        return jnp.mean(jax.vmap(lambda y, t: loss_fn({}, y, t))(ys, ts))
+
+    want_l, want_g = jax.value_and_grad(ref_loss)(params)
+    mesh = jax.make_mesh((2, 2), ("stage", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for kind in ("1f1b", "gpipe"):
+        sched = schedules.build(kind, S, M)
+        with jax.sharding.set_mesh(mesh):
+            res = jax.jit(lambda p, x, t: pipeline_train_grads(
+                sched, stage_fn, p, x, t, loss_fn))(params, xs, ts)
+        np.testing.assert_allclose(float(res["loss"]), float(want_l),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(res["stage_grads"]),
+                                   np.asarray(want_g), rtol=1e-5, atol=1e-6)
+        # the stash buffers are watermark-sized, never M
+        act_slots = int(res["stash_slots"][0])
+        assert act_slots == schedules.max_in_flight(sched)
+        if kind == "1f1b":
+            assert act_slots < M
+        print(f"MESH2D_OK {kind}")
+    print("ALL_MESH2D_OK")
+""")
+
+
+@pytest.mark.slow
+def test_1f1b_gradients_match_on_stage_data_mesh():
+    """Tentpole pin: 1F1B (and GPipe) gradients on a (stage=2, data=2)
+    mesh — microbatches sharded over 'data' inside the interpreter —
+    match sequential-reference autodiff to ≤1e-5 f32, and the activation
+    stash allocates max_in_flight() ring slots, not M."""
+    _run_sub(_MESH2D_SCRIPT, 4, "ALL_MESH2D_OK")
+
+
+_ENGINE2D_SCRIPT = textwrap.dedent("""
+    import jax
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import make_batch, reduced_config
+    from repro.engine import SPBEngine
+    from repro.launch.mesh import make_pipeline_mesh
+
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                       microbatches=2)
+    mesh = make_pipeline_mesh(2, data_parallel=2)
+    eng = SPBEngine(cfg, tcfg, SPBConfig(mode="temporal", k=2), mesh=mesh,
+                    parallelism="pipeline")
+    assert (eng.pipeline_stages, eng.pipeline_data) == (2, 2)
+    # ZeRO-1 over 'data' composed with the stage rule, live on the mesh
+    from jax.sharding import PartitionSpec as P
+    mu = jax.tree.leaves(eng.state_specs["opt"]["mu"]["groups"],
+                         is_leaf=lambda x: isinstance(x, P))
+    assert all(s[0] == "stage" for s in mu)
+    assert any("data" in tuple(s) for s in mu)
+    pl = jax.tree.leaves(eng.state_specs["params"]["groups"],
+                         is_leaf=lambda x: isinstance(x, P))
+    assert all("data" not in tuple(s) for s in pl)
+    eng.init_state(jax.random.key(0))
+    batch = make_batch(cfg, 8, 64)
+    hist = [float(eng.train_step(batch, s)["loss"]) for s in range(6)]
+    assert hist[-1] < hist[0], hist
+    print("ENGINE_2D_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_engine_on_stage_data_mesh():
+    """SPBEngine(parallelism='pipeline') on a (stage=2, data=2) mesh:
+    batch shards over 'data' at the jit boundary, optimizer moments
+    ZeRO-1-shard over 'data' within each stage, and the 1F1B temporal
+    session still learns."""
+    _run_sub(_ENGINE2D_SCRIPT, 4, "ENGINE_2D_OK", timeout=900)
 
 
 _HLO_SCRIPT = textwrap.dedent("""

@@ -93,3 +93,51 @@ def test_state_pspec_zero1_locked_specs():
             lambda b, z, l: check(b, z, l), base[key],
             specs["opt"][key], shapes["opt"][key],
             is_leaf=lambda x: isinstance(x, P))
+
+
+def test_zero1_composes_with_pipeline_state_pspec():
+    """On a (stage=2, data=2) mesh the stage rule claims the scanned
+    leading layer dim FIRST, then ZeRO-1 shards each optimizer moment
+    over 'data' on another dim — params stay replicated across 'data'
+    within a stage while their moments are data-sharded."""
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig(optimizer="adamw")
+    shapes = steps_lib.train_state_shapes(cfg, tcfg)
+    mesh = jax.sharding.AbstractMesh((("stage", 2), ("data", 2)))
+    specs = shd.pipeline_state_pspec(shapes, mesh=mesh, zero1=True)
+
+    # params: stage on the layer dim, never 'data'
+    p_leaves = jax.tree.leaves(specs["params"]["groups"],
+                               is_leaf=lambda x: isinstance(x, P))
+    assert p_leaves
+    for s in p_leaves:
+        assert s[0] == "stage"
+        assert "data" not in jax.tree.leaves(tuple(s))
+    # moments: stage preserved on dim0 AND 'data' on some later dim
+    # whenever one is divisible (wq moments (4, 64, 64): ZeRO-1 picks the
+    # first of the tied largest free dims -> dim1)
+    assert specs["opt"]["mu"]["groups"][0][0]["mixer"]["wq"] == \
+        P("stage", "data")
+    mu_leaves = jax.tree.leaves(specs["opt"]["mu"]["groups"],
+                                is_leaf=lambda x: isinstance(x, P))
+    assert all(s[0] == "stage" for s in mu_leaves)
+    assert any("data" in tuple(s) for s in mu_leaves)
+    # the stage dim is never double-claimed by ZeRO-1
+    for s in mu_leaves:
+        flat = [a for e in tuple(s) if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))]
+        assert flat.count("stage") == 1
+    # off-pipe leaves (embedding/head moments) still ZeRO-shard over data
+    assert "data" in tuple(specs["opt"]["mu"]["embed"]["tok"])
+    assert specs["params"]["final_norm"] == P()
+    assert specs["step"] == P()
+
+
+def test_pipeline_state_pspec_without_zero1_keeps_data_free():
+    cfg = reduced_config("yi-6b")
+    shapes = steps_lib.train_state_shapes(cfg, TrainConfig())
+    mesh = jax.sharding.AbstractMesh((("stage", 2), ("data", 2)))
+    specs = shd.pipeline_state_pspec(shapes, mesh=mesh, zero1=False)
+    for tree in (specs["params"], specs["opt"]):
+        for s in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)):
+            assert "data" not in tuple(s)

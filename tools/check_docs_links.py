@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Dead-link / dead-anchor check over docs/ and README.md.
+
+Every relative markdown link must resolve to a file in the repo, and
+every ``file.md#anchor`` must name a heading that actually exists in the
+target (GitHub slug rules: lowercase, punctuation stripped, spaces to
+hyphens).  External http(s) links are not fetched.  Exits non-zero with
+one line per broken link; also importable (``check() -> list[str]``) so
+``tests/test_docs.py`` runs the same check in tier-1.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def _anchors(md_path: Path) -> set:
+    text = md_path.read_text(encoding="utf-8")
+    text = _CODE_FENCE.sub("", text)        # headings inside fences don't count
+    return {_slug(m.group(1)) for m in _HEADING.finditer(text)}
+
+
+def _doc_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check() -> list:
+    """Return a list of 'file: problem' strings (empty = all good)."""
+    errors = []
+    for md in _doc_files():
+        text = md.read_text(encoding="utf-8")
+        text = _CODE_FENCE.sub("", text)    # links inside fences are examples
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            rel = md.name if not path_part else path_part
+            dest = (md.parent / rel).resolve() if path_part else md
+            if path_part:
+                if not dest.exists():
+                    errors.append(f"{md.relative_to(ROOT)}: broken link "
+                                  f"-> {target}")
+                    continue
+            if anchor and dest.suffix == ".md":
+                if _slug(anchor) not in _anchors(dest):
+                    errors.append(f"{md.relative_to(ROOT)}: dead anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(_doc_files())
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
