@@ -21,13 +21,15 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (bench_fig4_scheduler, bench_table1_spb_resources,
+    from benchmarks import (bench_fault_recovery, bench_fig4_scheduler,
+                            bench_table1_spb_resources,
                             bench_table2_model_profiles, bench_table3_quality)
     modules = [
         ("table1", bench_table1_spb_resources),
         ("table2", bench_table2_model_profiles),
         ("table3+fig3", bench_table3_quality),
         ("fig4", bench_fig4_scheduler),
+        ("fault_recovery", bench_fault_recovery),
     ]
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -48,12 +48,20 @@ def _unflatten_into(tree_like, flat: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint write failed.  For async writes the failure happened
+    on the writer thread; it is re-raised from the next ``save()`` or
+    ``wait()`` so a failed snapshot can never be silently treated as
+    durable."""
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
         self.dir = Path(directory)
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.dir.mkdir(parents=True, exist_ok=True)
 
     # -- write ------------------------------------------------------------
@@ -77,15 +85,27 @@ class CheckpointManager:
             self._gc()
 
         if self.async_write:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():     # capture, don't swallow: wait() re-raises
+                try:
+                    write()
+                except BaseException as e:
+                    self._error = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
         else:
             write()
 
     def wait(self):
+        """Join any in-flight async write; re-raise its failure (once)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                f"async checkpoint write under {self.dir} failed: "
+                f"{err!r}") from err
 
     def _gc(self):
         steps = sorted(self.steps())

@@ -12,18 +12,31 @@ interchangeable execution backends:
   task runs as a real jitted train step at the worker's SPB depth and
   the measured duration feeds back into the scheduler's cost model.
 
+Fault tolerance (``faults.py`` / ``health.py``): a seeded
+:class:`FaultPlan` injects machine crashes, transient task failures and
+stragglers into the shared event loop on the *virtual* clock, so the same
+plan drives either backend; :class:`HealthMonitor` + :class:`DegradePolicy`
+turn detected stragglers into shallower SPB depths instead of gang stalls.
+
 ``live`` imports jax; it is loaded lazily so pure-DES consumers
 (schedulers, trace benchmarks) stay jax-free.
 """
+from repro.cluster.faults import (  # noqa: F401
+    FaultPlan, MachineCrash, Straggler, TaskFailure, fail_keys_for)
+from repro.cluster.health import DegradePolicy, HealthMonitor  # noqa: F401
 from repro.cluster.runtime import (  # noqa: F401
     Assignment, ClusterRuntime, ClusterState, ExecutionBackend, JobSpec,
-    Scheduler, SimBackend, SimResult, Task, WorkerSpec)
+    Scheduler, SimBackend, SimResult, Task, TaskContext, TaskFailedError,
+    WorkerSpec)
 
 _LIVE = ("LiveBackend", "LiveJob", "make_live_job")
 
 __all__ = [
-    "Assignment", "ClusterRuntime", "ClusterState", "ExecutionBackend",
-    "JobSpec", "Scheduler", "SimBackend", "SimResult", "Task", "WorkerSpec",
+    "Assignment", "ClusterRuntime", "ClusterState", "DegradePolicy",
+    "ExecutionBackend", "FaultPlan", "HealthMonitor", "JobSpec",
+    "MachineCrash", "Scheduler", "SimBackend", "SimResult", "Straggler",
+    "Task", "TaskContext", "TaskFailedError", "TaskFailure", "WorkerSpec",
+    "fail_keys_for",
     *_LIVE,
 ]
 

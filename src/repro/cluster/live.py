@@ -29,13 +29,16 @@ real session pays it too) so steady-state estimates are not poisoned.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
-from repro.cluster.runtime import ExecutionBackend, JobSpec, Task, WorkerSpec
+from repro.checkpoint.manager import CheckpointManager
+from repro.cluster.runtime import (ExecutionBackend, JobSpec, Task,
+                                   TaskContext, TaskFailedError, WorkerSpec)
 from repro.config import ModelConfig, SPBConfig, TrainConfig
 from repro.data.pipeline import Pipeline
 from repro.engine import CyclePolicy, SPBEngine, SchedulerHookPolicy
@@ -73,7 +76,8 @@ def make_live_job(job_id: int, arrival: float, cfg: ModelConfig, *,
         frac = (j + 1) / k if k > 1 else 1.0
         workers.append(WorkerSpec(
             duration=est_step_s * (1 / 3 + frac * 2 / 3),
-            memory=est_mem_gb * (1 / 3 + frac * 2 / 3)))
+            memory=est_mem_gb * (1 / 3 + frac * 2 / 3),
+            frac=frac))
     spec = JobSpec(job_id=job_id, arrival=arrival, model=cfg.name,
                    model_size_gb=model_size_gb, iterations=iterations,
                    workers=workers)
@@ -88,14 +92,36 @@ class LiveBackend(ExecutionBackend):
     deterministic tests.  ``aot_cache``: optional directory of serialized
     step tables (the same cache the dry-run/trainer write) — engines that
     find a topology-matching table skip re-trace/re-compile.
+
+    Fault tolerance: each accepted task gets ``max_retries`` re-attempts
+    with exponential backoff (``backoff_s`` doubling; ``sleeper`` is
+    injectable) around the real train step; a step exceeding ``timeout_s``
+    counts as a failed attempt.  Exhausting the budget raises
+    :class:`~repro.cluster.runtime.TaskFailedError`, which the runtime
+    turns into a graceful per-job failure instead of a pool crash.  With
+    ``ckpt_dir`` set, the backend snapshots each job's engine state via
+    :class:`~repro.checkpoint.manager.CheckpointManager` when the
+    runtime's ``ckpt_every`` cadence fires, and ``job_rollback`` restores
+    the snapshot through the reshard-on-restore path
+    (``shardings=engine.state_shardings``), so a job can recover onto a
+    different submesh.  ``fault_hook(job_id, task, attempt)`` is a test
+    seam: it runs inside each attempt and may raise to simulate a step
+    failure.
     """
     name = "live"
 
     def __init__(self, jobs: List[LiveJob], *, mesh=None, ema: float = 0.5,
                  aot_cache: Optional[str] = None, verbose: bool = False,
-                 timer: Callable[[], float] = time.perf_counter):
+                 timer: Callable[[], float] = time.perf_counter,
+                 ckpt_dir: Optional[str] = None, max_retries: int = 2,
+                 backoff_s: float = 0.05, timeout_s: Optional[float] = None,
+                 sleeper: Callable[[float], None] = time.sleep,
+                 fault_hook: Optional[Callable[[int, Task, int],
+                                               None]] = None):
         if not 0.0 < ema <= 1.0:
             raise ValueError(f"ema must be in (0, 1], got {ema}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.jobs: Dict[int, LiveJob] = {lj.spec.job_id: lj for lj in jobs}
         if len(self.jobs) != len(jobs):
             raise ValueError("duplicate job_id in LiveJob list")
@@ -104,6 +130,19 @@ class LiveBackend(ExecutionBackend):
         self.aot_cache = aot_cache
         self.verbose = verbose
         self.timer = timer
+        self.ckpt_dir = ckpt_dir
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.timeout_s = timeout_s
+        self.sleeper = sleeper
+        self.fault_hook = fault_hook
+        self.ckpt_mgrs: Dict[int, CheckpointManager] = {}
+        # (job, iteration) -> steps_run at snapshot time (rollback rewind)
+        self._ckpt_steps: Dict[Tuple[int, int], int] = {}
+        self.restores: Dict[int, int] = {}
+        self.retries: Dict[int, int] = {}
+        self.degraded_steps: Dict[int, int] = {}
+        self.failed: Dict[int, str] = {}
         self.engines: Dict[int, SPBEngine] = {}
         self.hooks: Dict[int, SchedulerHookPolicy] = {}
         self._pipes: Dict[int, Pipeline] = {}
@@ -142,26 +181,35 @@ class LiveBackend(ExecutionBackend):
         self.hooks[job.job_id] = hook
         self.steps_run[job.job_id] = 0
         self.observed_depths[job.job_id] = set()
+        if self.ckpt_dir:
+            # iteration-0 snapshot: a crash before the first cadence tick
+            # still has something to roll back to
+            mgr = CheckpointManager(
+                os.path.join(self.ckpt_dir, f"job_{job.job_id}"), keep=3)
+            mgr.save(engine.state, 0)
+            self.ckpt_mgrs[job.job_id] = mgr
+            self._ckpt_steps[(job.job_id, 0)] = 0
         if self.verbose:
             print(f"[live] job={job.job_id} model={lj.cfg.name} "
                   f"workers={job.num_workers} arrived t={now:.2f}s",
                   flush=True)
 
     def run_task(self, job: JobSpec, task: Task, machine: int,
-                 start: float, migrated: bool) -> float:
+                 start: float, migrated: bool,
+                 ctx: Optional[TaskContext] = None) -> float:
         jid = task.job_id
         engine, hook = self.engines[jid], self.hooks[jid]
-        step = self.steps_run[jid]
         self.task_estimates[(jid, task.worker_id, task.iteration)] = \
             task.duration
-        # the scheduler's depth decision for this worker-task, enacted
-        hook.request_fraction((task.worker_id + 1) / job.num_workers)
-        batch = self._pipe(jid).get_batch(step)
-        t0 = self.timer()
-        metrics = engine.train_step(batch, step)
-        jax.block_until_ready(metrics["loss"])
-        measured = self.timer() - t0
-        self.steps_run[jid] = step + 1
+        # the scheduler's depth decision for this worker-task, enacted —
+        # shallower when the health monitor degraded this machine
+        frac = (task.worker_id + 1) / job.num_workers
+        if ctx is not None and ctx.degraded_frac < frac:
+            frac = ctx.degraded_frac
+            self.degraded_steps[jid] = self.degraded_steps.get(jid, 0) + 1
+        hook.request_fraction(frac)
+        measured, metrics = self._attempt(job, task, ctx)
+        self.steps_run[jid] += 1
         self.observed_depths[jid].add(engine.last_depth)
         self.last_xent[jid] = float(metrics["xent"])
         self.task_measured[(jid, task.worker_id, task.iteration)] = measured
@@ -184,6 +232,100 @@ class LiveBackend(ExecutionBackend):
                   flush=True)
         return measured
 
+    def _attempt(self, job: JobSpec, task: Task,
+                 ctx: Optional[TaskContext]) -> Tuple[float, dict]:
+        """One task = up to ``1 + max_retries`` real step attempts with
+        exponential backoff.  Returns (virtual duration, metrics); raises
+        :class:`TaskFailedError` when the budget is exhausted."""
+        jid = task.job_id
+        engine = self.engines[jid]
+        step = self.steps_run[jid]
+        attempts = self.max_retries + 1
+        delay = self.backoff_s
+        spent = 0.0
+        last_err: Optional[BaseException] = None
+        for attempt in range(attempts):
+            batch = self._pipe(jid).get_batch(step)
+            t0 = self.timer()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(jid, task, attempt)
+                metrics = engine.train_step(batch, step)
+                jax.block_until_ready(metrics["loss"])
+            except Exception as e:
+                spent += self.timer() - t0
+                last_err = e
+                self.retries[jid] = self.retries.get(jid, 0) + 1
+                if self.verbose:
+                    print(f"[live] job={jid} worker={task.worker_id} "
+                          f"iter={task.iteration} attempt {attempt + 1}/"
+                          f"{attempts} failed: {e!r}", flush=True)
+                if attempt + 1 < attempts:
+                    self.sleeper(delay)
+                    delay *= 2.0
+                continue
+            measured = self.timer() - t0
+            if ctx is not None and ctx.slowdown != 1.0:
+                measured *= ctx.slowdown    # injected straggler: inflate
+                #                             the virtual clock + feedback
+            spent += measured
+            if self.timeout_s is not None and measured > self.timeout_s:
+                last_err = TimeoutError(
+                    f"step took {measured:.3f}s > timeout_s="
+                    f"{self.timeout_s}")
+                self.retries[jid] = self.retries.get(jid, 0) + 1
+                if attempt + 1 < attempts:
+                    self.sleeper(delay)
+                    delay *= 2.0
+                continue
+            return measured, metrics
+        raise TaskFailedError(
+            jid, f"task (worker {task.worker_id}, iter {task.iteration}) "
+                 f"failed after {attempts} attempts: {last_err!r}",
+            elapsed_s=spent)
+
+    # -- checkpoint / recovery hooks ---------------------------------------
+
+    def job_checkpoint(self, job: JobSpec, iteration: int,
+                       now: float) -> None:
+        mgr = self.ckpt_mgrs.get(job.job_id)
+        if mgr is None:
+            return
+        mgr.save(self.engines[job.job_id].state, iteration)
+        self._ckpt_steps[(job.job_id, iteration)] = \
+            self.steps_run[job.job_id]
+        if self.verbose:
+            print(f"[live] job={job.job_id} checkpoint iter={iteration} "
+                  f"t={now:.2f}s", flush=True)
+
+    def job_rollback(self, job: JobSpec, to_iteration: int,
+                     now: float) -> None:
+        jid = job.job_id
+        engine = self.engines[jid]
+        mgr = self.ckpt_mgrs.get(jid)
+        if mgr is not None:
+            mgr.wait()      # snapshot must be durable (or raise) first
+            # reshard-on-restore: the replacement placement may be a
+            # different submesh; device_put onto the engine's shardings
+            state, step = mgr.restore(engine.state, step=to_iteration,
+                                      shardings=engine.state_shardings)
+            engine.attach_state(state)
+            assert step == to_iteration
+        else:
+            # no durable checkpoints: restart from the initial state
+            engine.init_state(jax.random.key(self.jobs[jid].tcfg.seed))
+        self.steps_run[jid] = self._ckpt_steps.get((jid, to_iteration), 0)
+        self.restores[jid] = self.restores.get(jid, 0) + 1
+        if self.verbose:
+            print(f"[live] job={jid} restored from checkpoint "
+                  f"iter={to_iteration} t={now:.2f}s", flush=True)
+
+    def job_failed(self, job: JobSpec, now: float, reason: str) -> None:
+        self.failed[job.job_id] = reason
+        if self.verbose:
+            print(f"[live] job={job.job_id} FAILED t={now:.2f}s: {reason}",
+                  flush=True)
+
     def job_finished(self, job: JobSpec, now: float) -> None:
         if self.verbose:
             print(f"[live] job={job.job_id} done t={now:.2f}s "
@@ -192,6 +334,8 @@ class LiveBackend(ExecutionBackend):
                   flush=True)
 
     def close(self) -> None:
+        for mgr in self.ckpt_mgrs.values():
+            mgr.wait()      # surface any failed async snapshot writes
         self.engines.clear()
         self.hooks.clear()
         self._pipes.clear()
@@ -220,5 +364,9 @@ class LiveBackend(ExecutionBackend):
                 "final_xent": self.last_xent.get(jid),
                 "mean_step_ms": (sum(meas) / len(meas) * 1e3 if meas
                                  else None),
+                "retries": self.retries.get(jid, 0),
+                "restores": self.restores.get(jid, 0),
+                "degraded_steps": self.degraded_steps.get(jid, 0),
+                "failed": self.failed.get(jid),
             }
         return out

@@ -24,6 +24,27 @@ The split (PR 3) is between *deciding* and *doing*:
   back into the job's ``WorkerSpec`` estimates so the scheduler's next
   placements use real costs.
 
+Fault tolerance (PR 6) threads a :class:`~repro.cluster.faults.FaultPlan`
+through the same event loop.  Because the clock is *virtual* in both
+backends (the DES advances by estimates, the live pool by measured
+durations), one seeded plan drives identical crash/straggler/retry
+schedules against either backend:
+
+* a machine **crash** kills the tasks on it, takes the machine out of
+  :class:`ClusterState` until its MTTR elapses, and rolls every job with
+  worker state resident on it back to its last checkpointed iteration
+  (cadence: ``ckpt_every``); the lost work is priced honestly in
+  :class:`SimResult` (``goodput``, ``lost_iterations``, ``recovery_s``);
+* a transient **task failure** charges the partial attempt and retries;
+* a **straggler** stretches task durations on one machine, and — when a
+  :class:`~repro.cluster.health.HealthMonitor` +
+  :class:`~repro.cluster.health.DegradePolicy` pair is attached — the
+  runtime responds by snapping that machine's tasks to a shallower SPB
+  depth (the :class:`TaskContext` carries the degraded fraction to the
+  backend, which enacts it for real under ``LiveBackend``).
+
+With ``faults=None`` the loop is byte-identical to the pre-fault runtime.
+
 The historical import path ``repro.jigsaw.simulator`` remains a shim over
 this module.
 """
@@ -31,16 +52,22 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
+
+from .faults import FaultPlan
+from .health import DegradePolicy, HealthMonitor
 
 
 @dataclass
 class WorkerSpec:
     """Per-worker cost estimates (seconds / GB).  Under a live backend
     ``duration`` is updated in place from measured step times — the
-    scheduler's cost model converges onto reality."""
+    scheduler's cost model converges onto reality.  ``frac`` is the
+    worker's planned SPB backprop fraction (1.0 = full backprop); the
+    degradation path uses it to price shallower-depth recovery steps."""
     duration: float              # one iteration of this worker's task
     memory: float                # peak GB while running
+    frac: float = 1.0            # planned backprop fraction (SPB depth)
 
 
 @dataclass
@@ -84,6 +111,42 @@ class ClusterState:
     machine_free_at: List[float]
     # worker (job, wid) -> machine it last ran on (affinity / migration)
     last_machine: Dict[Tuple[int, int], int]
+    # machines currently crashed (schedulers must not place on these;
+    # the runtime rejects such placements regardless)
+    down: Set[int] = field(default_factory=set)
+
+
+@dataclass(frozen=True)
+class TaskContext:
+    """Fault/degradation context the runtime hands to ``run_task``.
+
+    ``frac`` is the worker's planned backprop fraction, ``degraded_frac``
+    what the task should actually run at (== ``frac`` unless the health
+    monitor flagged the machine), ``slowdown`` the environment straggle
+    factor, and ``time_scale`` the net duration multiplier a DES backend
+    should apply (``slowdown`` x the degradation speedup).
+    """
+    frac: float = 1.0
+    degraded_frac: float = 1.0
+    slowdown: float = 1.0
+    time_scale: float = 1.0
+
+    @property
+    def degraded(self) -> bool:
+        return self.degraded_frac < self.frac
+
+
+class TaskFailedError(RuntimeError):
+    """A backend exhausted its retry budget for one task.  The runtime
+    responds by marking that *job* failed gracefully — other jobs keep
+    running — rather than crashing the session.  ``elapsed_s`` is the
+    virtual time the doomed attempts occupied the machine."""
+
+    def __init__(self, job_id: int, reason: str, elapsed_s: float = 0.0):
+        super().__init__(f"job {job_id}: {reason}")
+        self.job_id = job_id
+        self.reason = reason
+        self.elapsed_s = elapsed_s
 
 
 class Scheduler:
@@ -109,9 +172,24 @@ class ExecutionBackend:
         """A job entered the system (its iteration-0 tasks spawn next)."""
 
     def run_task(self, job: JobSpec, task: Task, machine: int,
-                 start: float, migrated: bool) -> float:
-        """Execute ``task``; return its duration in seconds."""
+                 start: float, migrated: bool,
+                 ctx: Optional[TaskContext] = None) -> float:
+        """Execute ``task``; return its duration in seconds.  ``ctx`` is
+        only passed when fault injection / depth degradation is active."""
         raise NotImplementedError
+
+    def job_checkpoint(self, job: JobSpec, iteration: int,
+                       now: float) -> None:
+        """The runtime's checkpoint cadence fired: persist ``job``'s
+        state as of ``iteration`` completed iterations."""
+
+    def job_rollback(self, job: JobSpec, to_iteration: int,
+                     now: float) -> None:
+        """A fault destroyed ``job``'s in-memory state: restore from the
+        snapshot at ``to_iteration`` (0 = the initial state)."""
+
+    def job_failed(self, job: JobSpec, now: float, reason: str) -> None:
+        """``job`` was marked failed after a :class:`TaskFailedError`."""
 
     def job_finished(self, job: JobSpec, now: float) -> None:
         """All of ``job``'s iterations completed."""
@@ -122,11 +200,15 @@ class ExecutionBackend:
 
 class SimBackend(ExecutionBackend):
     """The DES backend: tasks 'run' for exactly their estimated duration
-    (wall-clock-free — this is the historical simulator behavior)."""
+    (wall-clock-free — this is the historical simulator behavior), scaled
+    by the fault context when one is active."""
     name = "sim"
 
     def run_task(self, job: JobSpec, task: Task, machine: int,
-                 start: float, migrated: bool) -> float:
+                 start: float, migrated: bool,
+                 ctx: Optional[TaskContext] = None) -> float:
+        if ctx is not None:
+            return task.duration * ctx.time_scale
         return task.duration
 
 
@@ -141,6 +223,25 @@ class SimResult:
     # optional full schedule: (machine, start, end, job, worker, iteration)
     schedule: List[Tuple[int, float, float, int, int, int]] = field(
         default_factory=list)
+    # -- fault accounting (defaults keep fault-free results unchanged) ----
+    goodput: float = 0.0                   # (busy - wasted) / capacity;
+    #                                        == util when nothing failed
+    wasted_s: float = 0.0                  # machine-seconds whose output
+    #                                        was lost to faults/rollbacks
+    lost_iterations: Dict[int, int] = field(default_factory=dict)
+    recovery_s: Dict[int, float] = field(default_factory=dict)
+    failed_jobs: List[int] = field(default_factory=list)
+    crashes: int = 0
+    # (job, worker, iteration, machine, t_killed) per fault-killed task
+    killed_tasks: List[Tuple[int, int, int, int, float]] = field(
+        default_factory=list)
+    # (job, worker, iteration) per transient-failure retry
+    retried_tasks: List[Tuple[int, int, int]] = field(default_factory=list)
+    degraded_steps: int = 0                # tasks run at shallower depth
+
+    @property
+    def task_retries(self) -> int:
+        return len(self.retried_tasks)
 
     def migration_fraction(self, job_id: int) -> float:
         it = self.total_iterations[job_id]
@@ -155,13 +256,30 @@ class ClusterRuntime:
     starting within now+horizon are committed; everything else stays in
     the ready queue and is re-prioritized at the next decision point (this
     is what lets LAS/packing orders actually matter).
+
+    Fault knobs (all default-off; the fault-free path is byte-identical
+    to the historical runtime):
+
+    * ``faults`` — a :class:`~repro.cluster.faults.FaultPlan` injected
+      into the event loop on the virtual clock.
+    * ``ckpt_every`` — checkpoint cadence in iterations; the runtime
+      calls ``backend.job_checkpoint`` at each boundary and rolls a
+      faulted job back to its last snapshotted iteration (0 when the
+      cadence is off, i.e. the job restarts from scratch).
+    * ``health`` + ``degrade`` — straggler detection and the SPB-depth
+      response: tasks placed on a flagged machine run at a shallower
+      backprop fraction (priced into the DES, enacted for real by
+      ``LiveBackend``).
     """
 
     def __init__(self, jobs: List[JobSpec], scheduler: Scheduler,
                  backend: Optional[ExecutionBackend] = None, *,
                  num_machines: int = 45, machine_mem_gb: float = 16.0,
                  gamma: float = 2.0, max_time: float = 10e6,
-                 horizon: float = 60.0, record_schedule: bool = False):
+                 horizon: float = 60.0, record_schedule: bool = False,
+                 faults: Optional[FaultPlan] = None, ckpt_every: int = 0,
+                 health: Optional[HealthMonitor] = None,
+                 degrade: Optional[DegradePolicy] = None):
         self.jobs = list(jobs)
         self.jobs_by_id = {j.job_id: j for j in self.jobs}
         self.scheduler = scheduler
@@ -172,6 +290,12 @@ class ClusterRuntime:
         self.max_time = max_time
         self.horizon = horizon
         self.record_schedule = record_schedule
+        self.faults = faults
+        if ckpt_every < 0:
+            raise ValueError(f"ckpt_every must be >= 0, got {ckpt_every}")
+        self.ckpt_every = ckpt_every
+        self.health = health
+        self.degrade = degrade
         for j in self.jobs:   # fail fast on unplaceable jobs (would livelock)
             if j.num_workers > num_machines:
                 raise ValueError(f"job {j.job_id} needs {j.num_workers} "
@@ -184,6 +308,7 @@ class ClusterRuntime:
         """Drive the session to completion and summarize it."""
         jobs_by_id = self.jobs_by_id
         gamma, horizon = self.gamma, self.horizon
+        plan, health, degrade = self.faults, self.health, self.degrade
         state = ClusterState(self.num_machines, self.machine_mem_gb,
                              [0.0] * self.num_machines, {})
 
@@ -194,6 +319,32 @@ class ClusterRuntime:
         migrations = {j.job_id: 0 for j in self.jobs}
         busy = 0.0
 
+        # fault bookkeeping.  ``gen``/``tgen`` make in-flight work
+        # invalidatable: a rollback bumps the job's generation, so pending
+        # task_done/retry events for its old tasks pop as stale no-ops.
+        # Maintained unconditionally (never stale without faults).
+        gen: Dict[int, int] = {j.job_id: 0 for j in self.jobs}
+        tgen: Dict[int, int] = {}          # id(task) -> spawn generation
+        # id(task) -> (task, machine, start, end) for accepted, unfinished
+        inflight: Dict[int, Tuple[Task, int, float, float]] = {}
+        ckpt_iter: Dict[int, int] = {j.job_id: 0 for j in self.jobs}
+        # machine-seconds of *completed* tasks since the job's last
+        # snapshot: exactly the work a rollback discards (checkpointed
+        # progress is durable; uncommitted progress is what gets wasted)
+        ckpt_busy: Dict[int, float] = {j.job_id: 0.0 for j in self.jobs}
+        failed: Set[int] = set()
+        failed_jobs: List[int] = []
+        recovery_pending: Dict[int, Tuple[float, int]] = {}  # t0, target it
+        recovery_s: Dict[int, float] = {}
+        lost_iterations: Dict[int, int] = {}
+        killed_tasks: List[Tuple[int, int, int, int, float]] = []
+        retried_tasks: List[Tuple[int, int, int]] = []
+        failed_once: Set[Tuple[int, int, int]] = set()
+        down_until: Dict[int, float] = {}
+        log_idx: Dict[int, int] = {}       # id(task) -> schedule_log index
+        wasted = 0.0
+        crashes_n = 0
+
         ready: List[Task] = []
         # event heap: (time, seq, kind, payload)
         events: List[Tuple[float, int, str, object]] = []
@@ -201,15 +352,97 @@ class ClusterRuntime:
         for j in self.jobs:
             heapq.heappush(events, (j.arrival, seq, "arrival", j.job_id))
             seq += 1
+        if plan is not None:
+            for c in plan.crashes:
+                if 0 <= c.machine < self.num_machines:
+                    heapq.heappush(events, (c.at, seq, "crash", c))
+                    seq += 1
+                    if c.repaired_at < float("inf"):
+                        heapq.heappush(events, (c.repaired_at, seq,
+                                                "repair", c.machine))
+                        seq += 1
 
         def spawn_iteration(job: JobSpec, it: int, t: float):
             remaining[job.job_id] = job.num_workers
+            g = gen[job.job_id]
             for wid, w in enumerate(job.workers):
-                ready.append(Task(job.job_id, wid, it, w.duration,
-                                  w.memory, t))
+                task = Task(job.job_id, wid, it, w.duration, w.memory, t)
+                tgen[id(task)] = g
+                ready.append(task)
 
         schedule_log: List[Tuple[int, float, float, int, int, int]] = []
         now = 0.0
+
+        def drop_job_tasks(jid: int) -> None:
+            """Invalidate a job's outstanding work (rollback / failure):
+            its ready tasks vanish, its pending task_done/retry events go
+            stale via the generation bump."""
+            gen[jid] += 1
+            keep = []
+            for t in ready:
+                if t.job_id == jid:
+                    tgen.pop(id(t), None)
+                else:
+                    keep.append(t)
+            ready[:] = keep
+
+        def account_inflight(jid: int, crashed: Optional[int]) -> None:
+            """Price a faulted job's accepted-but-unfinished tasks.  Tasks
+            on the crashed machine stop dead (unexecuted time refunded,
+            executed time wasted, schedule entry truncated); siblings on
+            healthy machines hold their reservation to completion but the
+            result is discarded (full duration wasted) — conservative, and
+            it keeps single-value machine free-times sufficient."""
+            nonlocal busy, wasted
+            for tid in [tid for tid, rec in inflight.items()
+                        if rec[0].job_id == jid]:
+                task, machine, start, end = inflight.pop(tid)
+                dur = end - start
+                if crashed is not None and machine == crashed:
+                    executed = min(max(0.0, now - start), dur)
+                    busy -= dur - executed
+                    wasted += executed
+                    i = log_idx.pop(tid, None)
+                    if i is not None:
+                        if executed <= 0.0:
+                            schedule_log[i] = None    # never actually ran
+                        else:
+                            m, s, _e, j_, w_, it_ = schedule_log[i]
+                            schedule_log[i] = (m, s, start + executed,
+                                               j_, w_, it_)
+                else:
+                    wasted += dur
+                killed_tasks.append((task.job_id, task.worker_id,
+                                     task.iteration, machine, now))
+
+        def rollback(jid: int, crashed: Optional[int]) -> None:
+            """Roll ``jid`` back to its last checkpointed iteration after
+            worker state on ``crashed`` was lost.  Workers whose affinity
+            pointed at the dead machine re-place fresh (they reload from
+            the checkpoint, not via model transfer — no migration
+            penalty); survivors keep their affinity."""
+            nonlocal wasted
+            job = jobs_by_id[jid]
+            k = ckpt_iter[jid]
+            lost_iterations[jid] = (lost_iterations.get(jid, 0)
+                                    + max(0, cur_iter[jid] - k))
+            wasted += ckpt_busy[jid]     # completed-but-unsnapshotted work
+            ckpt_busy[jid] = 0.0
+            account_inflight(jid, crashed)
+            drop_job_tasks(jid)
+            if crashed is not None:
+                for wid in range(job.num_workers):
+                    if state.last_machine.get((jid, wid)) == crashed:
+                        del state.last_machine[(jid, wid)]
+            if jid not in recovery_pending:
+                recovery_pending[jid] = (now, cur_iter[jid])
+            else:      # crashed again mid-recovery: keep the earliest t0
+                t0, target = recovery_pending[jid]
+                recovery_pending[jid] = (t0, max(target, cur_iter[jid]))
+            cur_iter[jid] = k
+            spawn_iteration(job, k, now + plan.restore_s)
+            self.backend.job_rollback(job, k, now)
+
         fruitless = 0
         while events or ready:
             if events:
@@ -223,16 +456,67 @@ class ClusterRuntime:
                 elif kind == "task_done":
                     task, machine = payload
                     jid = task.job_id
-                    remaining[jid] -= 1
-                    if remaining[jid] == 0:
-                        job = jobs_by_id[jid]
-                        nxt = cur_iter[jid] + 1
-                        cur_iter[jid] = nxt
-                        if nxt >= job.iterations:
-                            done_jobs[jid] = now
-                            self.backend.job_finished(job, now)
-                        else:
-                            spawn_iteration(job, nxt, now)
+                    stale = tgen.pop(id(task), -1) != gen[jid]
+                    rec = inflight.pop(id(task), None)
+                    log_idx.pop(id(task), None)
+                    if not stale:
+                        if rec is not None:
+                            ckpt_busy[jid] += rec[3] - rec[2]
+                        remaining[jid] -= 1
+                        if remaining[jid] == 0:
+                            job = jobs_by_id[jid]
+                            nxt = cur_iter[jid] + 1
+                            cur_iter[jid] = nxt
+                            if jid in recovery_pending:
+                                t0, target = recovery_pending[jid]
+                                if nxt >= target or nxt >= job.iterations:
+                                    recovery_s[jid] = (
+                                        recovery_s.get(jid, 0.0)
+                                        + (now - t0))
+                                    del recovery_pending[jid]
+                            if nxt >= job.iterations:
+                                done_jobs[jid] = now
+                                self.backend.job_finished(job, now)
+                            else:
+                                if (self.ckpt_every > 0
+                                        and nxt % self.ckpt_every == 0):
+                                    ckpt_iter[jid] = nxt
+                                    ckpt_busy[jid] = 0.0   # now durable
+                                    self.backend.job_checkpoint(job, nxt,
+                                                                now)
+                                spawn_iteration(job, nxt, now)
+                elif kind == "retry":
+                    task = payload
+                    if tgen.get(id(task), -1) == gen[task.job_id]:
+                        ready.append(task)   # transient failure: go again
+                    else:
+                        tgen.pop(id(task), None)    # job rolled back/failed
+                elif kind == "crash":
+                    crash = payload
+                    m = crash.machine
+                    crashes_n += 1
+                    down_until[m] = max(down_until.get(m, 0.0),
+                                        crash.repaired_at)
+                    state.down.add(m)
+                    state.machine_free_at[m] = down_until[m]
+                    # every job with worker state resident on m loses it:
+                    # running there now, or parked there since last iter
+                    affected = {rec[0].job_id for rec in inflight.values()
+                                if rec[1] == m}
+                    affected |= {j_ for (j_, _w), mm in
+                                 state.last_machine.items() if mm == m}
+                    for jid in sorted(affected):
+                        if jid in done_jobs or jid in failed:
+                            continue
+                        rollback(jid, m)
+                    for key in [k for k, mm in state.last_machine.items()
+                                if mm == m]:
+                        del state.last_machine[key]
+                elif kind == "repair":
+                    m = payload
+                    # overlapping crashes: only the last repair revives
+                    if now >= down_until.get(m, 0.0):
+                        state.down.discard(m)
             # ask the policy to place whatever is ready
             accepted_any = False
             accepted_ids: set = set()
@@ -243,7 +527,14 @@ class ClusterRuntime:
                     t = a.task
                     if id(t) in accepted_ids:
                         continue        # policy returned the task twice
-                    key = (t.job_id, t.worker_id)
+                    jid = t.job_id
+                    if jid in failed:
+                        accepted_ids.add(id(t))     # sweep out of ready
+                        tgen.pop(id(t), None)
+                        continue
+                    if a.machine in state.down:
+                        continue        # no placements on a dead machine
+                    key = (jid, t.worker_id)
                     prev = state.last_machine.get(key)
                     mig = prev is not None and prev != a.machine
                     start = max(a.start, now,
@@ -252,20 +543,89 @@ class ClusterRuntime:
                     if mig:
                         # the one place the penalty is charged (tests pin
                         # "exactly once per move" for every backend)
-                        start += gamma * jobs_by_id[t.job_id].model_size_gb
+                        start += gamma * jobs_by_id[jid].model_size_gb
                     if start > now + horizon:
                         continue        # outside the planning interval
                     accepted_ids.add(id(t))
                     if mig:
-                        migrations[t.job_id] += 1
-                    duration = self.backend.run_task(
-                        jobs_by_id[t.job_id], t, a.machine, start, mig)
+                        migrations[jid] += 1
+                    ctx = None
+                    if plan is not None or (health is not None
+                                            and degrade is not None):
+                        w = jobs_by_id[jid].workers[t.worker_id]
+                        slow = (plan.slowdown(a.machine, start)
+                                if plan is not None else 1.0)
+                        frac = degraded = w.frac
+                        tscale = slow
+                        if (health is not None and degrade is not None
+                                and health.is_straggler(a.machine)):
+                            d = degrade.degrade(frac)
+                            if d < frac:
+                                degraded = d
+                                tscale *= degrade.time_scale(frac, d)
+                                degrade.applied += 1
+                        ctx = TaskContext(frac, degraded, slow, tscale)
+                    fkey = (jid, t.worker_id, t.iteration)
+                    if (plan is not None and fkey not in failed_once
+                            and plan.fails(*fkey)):
+                        # transient failure: the first attempt dies partway
+                        # through; charge the wasted partial run and retry
+                        # from the event loop (exactly once per identity)
+                        failed_once.add(fkey)
+                        f = plan.failure_for(*fkey)
+                        partial = t.duration * ctx.time_scale * f.frac
+                        state.machine_free_at[a.machine] = start + partial
+                        state.last_machine[key] = a.machine
+                        busy += partial
+                        wasted += partial
+                        retried_tasks.append(fkey)
+                        t.ready_time = start + partial
+                        if self.record_schedule and partial > 0.0:
+                            schedule_log.append((a.machine, start,
+                                                 start + partial, jid,
+                                                 t.worker_id, t.iteration))
+                        heapq.heappush(events, (start + partial, seq,
+                                                "retry", t))
+                        seq += 1
+                        accepted_any = True
+                        continue
+                    try:
+                        if ctx is None:
+                            duration = self.backend.run_task(
+                                jobs_by_id[jid], t, a.machine, start, mig)
+                        else:
+                            duration = self.backend.run_task(
+                                jobs_by_id[jid], t, a.machine, start, mig,
+                                ctx=ctx)
+                    except TaskFailedError as e:
+                        # retries exhausted: fail the job, keep the pool up
+                        elapsed = max(0.0, e.elapsed_s)
+                        state.machine_free_at[a.machine] = start + elapsed
+                        busy += elapsed
+                        # the doomed attempts + every completed-but-never-
+                        # checkpointed iteration of the dead job are waste
+                        wasted += elapsed + ckpt_busy[jid]
+                        ckpt_busy[jid] = 0.0
+                        failed.add(jid)
+                        failed_jobs.append(jid)
+                        account_inflight(jid, None)
+                        drop_job_tasks(jid)
+                        recovery_pending.pop(jid, None)
+                        self.backend.job_failed(jobs_by_id[jid], now,
+                                                e.reason)
+                        accepted_any = True
+                        continue
+                    if health is not None and t.duration > 0:
+                        health.observe(a.machine, estimate_s=t.duration,
+                                       observed_s=duration)
                     end = start + duration
                     state.machine_free_at[a.machine] = end
                     state.last_machine[key] = a.machine
                     busy += duration
+                    inflight[id(t)] = (t, a.machine, start, end)
                     if self.record_schedule:
-                        schedule_log.append((a.machine, start, end, t.job_id,
+                        log_idx[id(t)] = len(schedule_log)
+                        schedule_log.append((a.machine, start, end, jid,
                                              t.worker_id, t.iteration))
                     heapq.heappush(events, (end, seq, "task_done",
                                             (t, a.machine)))
@@ -296,6 +656,21 @@ class ClusterRuntime:
                for jid in done_jobs}
         util = (busy / (makespan * self.num_machines) if makespan > 0
                 else 0.0)
+        goodput = ((busy - wasted) / (makespan * self.num_machines)
+                   if makespan > 0 else 0.0)
+        # jobs still mid-recovery when the session ended (e.g. failed, or
+        # the horizon cut them off): their window closes at `now`
+        for jid, (t0, _target) in recovery_pending.items():
+            recovery_s[jid] = recovery_s.get(jid, 0.0) + (now - t0)
+        if plan is not None:
+            schedule_log = [e for e in schedule_log if e is not None]
         return SimResult(makespan, jct, migrations,
                          {j.job_id: j.iterations for j in self.jobs},
-                         busy, util, schedule_log)
+                         busy, util, schedule_log,
+                         goodput=goodput, wasted_s=wasted,
+                         lost_iterations=lost_iterations,
+                         recovery_s=recovery_s, failed_jobs=failed_jobs,
+                         crashes=crashes_n, killed_tasks=killed_tasks,
+                         retried_tasks=retried_tasks,
+                         degraded_steps=(degrade.applied if degrade
+                                         else 0))

@@ -37,6 +37,13 @@ class AOTCompatError(RuntimeError):
     """Serialized step table is incompatible with this process."""
 
 
+class AOTCorruptError(AOTCompatError):
+    """Serialized step table is damaged on disk (truncated/garbage bin,
+    unparseable manifest).  A subclass of :class:`AOTCompatError` so
+    callers treating the cache as best-effort need one except clause;
+    ``SPBEngine.load_aot`` treats it as a cache miss and re-traces."""
+
+
 def _depth_tag(key: Any) -> str:
     return "full" if key is None else str(key)
 
@@ -156,7 +163,12 @@ def import_table(path: Path, *, expect_mesh=None) -> Dict[Any, Callable]:
     mf_path = path / "manifest.json"
     if not mf_path.exists():
         raise FileNotFoundError(f"no AOT step table at {path}")
-    manifest = json.loads(mf_path.read_text())
+    try:
+        manifest = json.loads(mf_path.read_text())
+    except json.JSONDecodeError as e:
+        raise AOTCorruptError(f"unparseable manifest {mf_path}: {e}") from e
+    if not isinstance(manifest, dict):
+        raise AOTCorruptError(f"manifest {mf_path} is not an object")
     if manifest.get("fmt") != _FMT_VERSION:
         raise AOTCompatError(
             f"step-table format {manifest.get('fmt')} != {_FMT_VERSION}")
@@ -174,10 +186,24 @@ def import_table(path: Path, *, expect_mesh=None) -> Dict[Any, Callable]:
             raise AOTCompatError(
                 f"serialized for {k}={env.get(k)!r}, this process has {v!r}")
     table: Dict[Any, Callable] = {}
-    for tag, fname in manifest["entries"].items():
-        payload, in_tree, out_tree = pickle.loads((path / fname).read_bytes())
-        table[_untag_depth(tag)] = se.deserialize_and_load(
-            payload, in_tree, out_tree)
+    for tag, fname in manifest.get("entries", {}).items():
+        entry = path / fname
+        if not entry.exists():
+            # manifest promises an entry that is gone: a cache miss for
+            # the whole table (callers fall back to tracing), not a crash
+            raise FileNotFoundError(f"AOT entry {entry} missing")
+        try:
+            payload, in_tree, out_tree = pickle.loads(entry.read_bytes())
+        except Exception as e:       # truncated/garbage pickle payloads
+            raise AOTCorruptError(f"corrupt AOT entry {entry}: {e}") from e
+        try:
+            table[_untag_depth(tag)] = se.deserialize_and_load(
+                payload, in_tree, out_tree)
+        except AOTCompatError:
+            raise
+        except Exception as e:       # valid pickle, bogus executable blob
+            raise AOTCorruptError(
+                f"undeserializable AOT entry {entry}: {e}") from e
     return table
 
 

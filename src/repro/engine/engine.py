@@ -337,11 +337,16 @@ class SPBEngine:
 
     def load_aot(self, path) -> bool:
         """Import a serialized step table (no tracing/compiling).  Returns
-        False when ``path`` has no table; raises AOTCompatError on a
-        topology mismatch."""
+        False when ``path`` has no table, or when what is there is damaged
+        (corrupt manifest/bin, missing entry file) — a cache miss, so the
+        caller re-traces; raises AOTCompatError on a genuine topology
+        mismatch (the table is intact but for different hardware)."""
         if not aot.table_exists(path):
             return False
-        table = aot.import_table(path, expect_mesh=self.mesh)
+        try:
+            table = aot.import_table(path, expect_mesh=self.mesh)
+        except (aot.AOTCorruptError, FileNotFoundError):
+            return False
         self._steps.update(table)
         self._frozen = True
         return True

@@ -64,6 +64,7 @@ class JigsawScheduler(Scheduler):
         free = list(state.machine_free_at)
         mem_cap = state.machine_mem_gb
         n_mach = state.num_machines
+        down = state.down               # crashed machines: never place
         stale = 0
         for _prio, _seq, t in self._order:
             if id(t) not in live:
@@ -76,6 +77,8 @@ class JigsawScheduler(Scheduler):
             floor = t.ready_time if t.ready_time > now else now
             best_m, best_start = None, float("inf")
             for m in range(n_mach):
+                if m in down:
+                    continue
                 start = free[m] if free[m] > floor else floor
                 if prev is not None and prev != m:
                     start += penalty
@@ -186,7 +189,8 @@ class _GangScheduler(Scheduler):
                 machines = [state.last_machine[(jid, t.worker_id)]
                             for t in jtasks]
             else:
-                order = sorted(range(state.num_machines),
+                order = sorted((m for m in range(state.num_machines)
+                                if m not in state.down),
                                key=self._machine_key(free))
                 if len(order) < len(jtasks):
                     continue

@@ -47,7 +47,8 @@ def generate_trace(num_jobs: int = 500, *, seed: int = 0,
         for j in range(k):
             frac = (j + 1) / k if (spb and k > 1) else 1.0
             workers.append(WorkerSpec(duration=model.task_time(frac),
-                                      memory=model.task_mem(frac)))
+                                      memory=model.task_mem(frac),
+                                      frac=frac))
         jobs.append(JobSpec(job_id=jid, arrival=t, model=model.name,
                             model_size_gb=model.model_size_gb,
                             iterations=iters, workers=workers))

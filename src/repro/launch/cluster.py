@@ -20,7 +20,8 @@ import argparse
 import json
 import time
 
-from repro.cluster import ClusterRuntime, LiveBackend, make_live_job
+from repro.cluster import (ClusterRuntime, DegradePolicy, FaultPlan,
+                           HealthMonitor, LiveBackend, make_live_job)
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import get_config, reduced_config
 from repro.jigsaw.schedulers import ALL_SCHEDULERS
@@ -28,6 +29,14 @@ from repro.jigsaw.schedulers import ALL_SCHEDULERS
 
 def build_session(args):
     """The CLI's construction path: args -> (ClusterRuntime, backend)."""
+    fault_spec = getattr(args, "fault_plan", "")
+    plan = (FaultPlan.parse(fault_spec,
+                            restore_s=getattr(args, "restore_s", 0.0))
+            if fault_spec else None)
+    health = degrade = None
+    if getattr(args, "degrade", False):
+        health = HealthMonitor()
+        degrade = DegradePolicy()
     archs = [a for a in args.archs.split(",") if a]
     live_jobs = []
     for i in range(args.jobs):
@@ -48,13 +57,17 @@ def build_session(args):
         specs = [lj.spec for lj in live_jobs]
     else:
         backend = LiveBackend(live_jobs, verbose=not args.quiet,
-                              aot_cache=args.aot_cache or None)
+                              aot_cache=args.aot_cache or None,
+                              ckpt_dir=getattr(args, "ckpt_dir", "") or None,
+                              max_retries=getattr(args, "max_retries", 2))
         specs = backend.specs()
     scheduler = ALL_SCHEDULERS[args.scheduler]()
     runtime = ClusterRuntime(
         specs, scheduler, backend, num_machines=args.machines,
         machine_mem_gb=args.mem_gb, gamma=args.gamma, horizon=args.horizon,
-        record_schedule=True)
+        record_schedule=True, faults=plan,
+        ckpt_every=getattr(args, "ckpt_every", 0),
+        health=health, degrade=degrade)
     return runtime, backend
 
 
@@ -87,6 +100,23 @@ def main(argv=None):
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--aot-cache", default="")
+    ap.add_argument("--fault-plan", default="",
+                    help="inject faults, ';'-separated (virtual seconds): "
+                         "crash:M@T+R | slow:M@A-BxF | fail:J.W@I")
+    ap.add_argument("--restore-s", type=float, default=0.0,
+                    help="checkpoint-restore cost charged after a rollback")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in iterations (0 = off; "
+                         "faulted jobs then restart from iteration 0)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="durable per-job checkpoints for the live pool "
+                         "(restore-on-fault reshards onto the live mesh)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="per-task retry budget (exponential backoff) "
+                         "before the job is failed gracefully")
+    ap.add_argument("--degrade", action="store_true",
+                    help="attach HealthMonitor+DegradePolicy: stragglers "
+                         "get shallower SPB depths instead of gang stalls")
     ap.add_argument("--sim", action="store_true",
                     help="run the same session through the DES backend "
                          "instead of live execution (no jax steps)")
@@ -122,14 +152,28 @@ def main(argv=None):
     print(f"[cluster] scheduler={args.scheduler} "
           f"jobs_done={len(res.jct)}/{args.jobs} "
           f"distinct_depths={distinct} makespan={res.makespan:.2f}s "
-          f"util={res.util:.3f} "
+          f"util={res.util:.3f} goodput={res.goodput:.3f} "
           f"migrations={sum(res.migrations.values())} wall={wall:.1f}s",
           flush=True)
+    if res.crashes or res.task_retries or res.failed_jobs:
+        print(f"[cluster] faults: crashes={res.crashes} "
+              f"retries={res.task_retries} "
+              f"lost_iterations={sum(res.lost_iterations.values())} "
+              f"recovery_s={sum(res.recovery_s.values()):.2f} "
+              f"wasted_s={res.wasted_s:.2f} "
+              f"degraded_steps={res.degraded_steps} "
+              f"failed_jobs={res.failed_jobs}", flush=True)
     if args.json_out:
         rec = {"scheduler": args.scheduler, "jobs": args.jobs,
                "machines": args.machines, "makespan": res.makespan,
                "util": res.util, "jct": res.jct,
-               "migrations": res.migrations, "summary": summary}
+               "migrations": res.migrations,
+               "goodput": res.goodput, "wasted_s": res.wasted_s,
+               "crashes": res.crashes, "task_retries": res.task_retries,
+               "lost_iterations": res.lost_iterations,
+               "recovery_s": res.recovery_s,
+               "failed_jobs": res.failed_jobs,
+               "degraded_steps": res.degraded_steps, "summary": summary}
         with open(args.json_out, "w") as f:
             json.dump(rec, f, indent=2, default=str)
     backend.close()

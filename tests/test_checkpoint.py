@@ -1,6 +1,10 @@
 """Checkpoint manager: roundtrip, atomicity, keep-N GC, async writes,
-resume semantics, and elastic restore (different DP width)."""
+async-failure surfacing, resume semantics, and elastic restore (different
+DP width; pipeline <-> data meshes in a subprocess)."""
 import json
+import subprocess
+import sys
+import textwrap
 from pathlib import Path
 
 import jax
@@ -8,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint import manager as manager_mod
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
 from repro.config import TrainConfig
 from repro.configs import make_batch, reduced_config
 from repro.dist import steps as steps_lib
@@ -74,6 +79,44 @@ def test_manifest_contents(tmp_path, state):
     assert man["step"] == 7 and man["num_arrays"] > 10 and man["bytes"] > 0
 
 
+def _boom(*_a, **_k):
+    raise OSError("disk full")
+
+
+def test_async_write_failure_raises_on_wait(tmp_path, state, monkeypatch):
+    """A failure on the writer thread is captured and re-raised — once —
+    by wait(); the failed snapshot is never published, and the manager
+    stays usable afterwards."""
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    mgr.save(state, 1)
+    mgr.wait()
+    monkeypatch.setattr(manager_mod.np, "savez", _boom)
+    mgr.save(state, 2)
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.wait()
+    mgr.wait()                          # raised once, then cleared
+    monkeypatch.undo()
+    mgr.save(state, 3)
+    mgr.wait()
+    assert mgr.steps() == [1, 3]        # step 2 never became durable
+
+
+def test_async_write_failure_raises_on_next_save(tmp_path, state,
+                                                 monkeypatch):
+    """save() joins the previous write first, so a silent background
+    failure surfaces at the next snapshot attempt instead of vanishing."""
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    monkeypatch.setattr(manager_mod.np, "savez", _boom)
+    mgr.save(state, 1)
+    mgr._thread.join()                  # let it fail before un-patching
+    monkeypatch.undo()
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.save(state, 2)
+    mgr.save(state, 3)                  # error consumed; manager usable
+    mgr.wait()
+    assert mgr.steps() == [3]
+
+
 def test_elastic_restore_changes_sharding(tmp_path, state):
     """Checkpoints store unsharded arrays: restoring under a different
     'mesh' (here: different device_put target) keeps values identical."""
@@ -96,3 +139,76 @@ def test_train_resume_matches_uninterrupted(tmp_path):
     h_failed = train_mod.train(args + ["--checkpoint-dir",
                                        str(tmp_path / "b"), "--fail-at", "5"])
     np.testing.assert_allclose(h_straight[-1], h_failed[-1], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Elastic reshard-on-restore across mesh *shapes* (subprocess: the device
+# count locks at jax init)
+# ---------------------------------------------------------------------------
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+        "JAX_PLATFORMS": "cpu"}
+
+
+def _run_sub(script: str, devices: int, ok: str, timeout: int = 900):
+    pre = (f"import os\nos.environ['XLA_FLAGS'] = "
+           f"'--xla_force_host_platform_device_count={devices}'\n")
+    r = subprocess.run([sys.executable, "-c", pre + script],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=_ENV)
+    assert ok in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+
+
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import tempfile
+    import jax, numpy as np
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import make_batch, reduced_config
+    from repro.engine import SPBEngine
+    from repro.launch.mesh import make_host_mesh, make_pipeline_mesh
+
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                       microbatches=2)
+    spb = SPBConfig(mode="temporal", k=2)
+    batch = make_batch(cfg, 8, 64)
+
+    def build(kind):
+        if kind == "pipe":
+            return SPBEngine(cfg, tcfg, spb,
+                             mesh=make_pipeline_mesh(2, data_parallel=2),
+                             parallelism="pipeline")
+        return SPBEngine(cfg, tcfg, spb, mesh=make_host_mesh())
+
+    for src, dst in (("pipe", "data"), ("data", "pipe")):
+        with tempfile.TemporaryDirectory() as d:
+            a = build(src)
+            a.init_state(jax.random.key(0))
+            for s in range(3):
+                a.train_step(batch, s)
+            mgr = CheckpointManager(d, async_write=False)
+            mgr.save(a.state, 3)
+            cont_a = [float(a.train_step(batch, s)["xent"]) for s in (3, 4)]
+
+            b = build(dst)
+            b.init_state(jax.random.key(1))   # thrown away by the restore
+            state, step = mgr.restore(b.state, step=3,
+                                      shardings=b.state_shardings)
+            assert step == 3
+            b.attach_state(state)
+            cont_b = [float(b.train_step(batch, s)["xent"]) for s in (3, 4)]
+            np.testing.assert_allclose(cont_b, cont_a, rtol=2e-4)
+            print(f"ELASTIC_OK {src}->{dst}")
+    print("ALL_ELASTIC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_reshard_between_pipeline_and_data_meshes():
+    """Checkpoints store logical (unsharded) arrays, so a job snapshotted
+    under a (stage=2, data=2) pipeline mesh restores onto a data-only
+    mesh — and vice versa — through ``restore(shardings=...)`` +
+    ``attach_state``, and the continued losses match the uninterrupted
+    session on the original mesh."""
+    _run_sub(_ELASTIC_SCRIPT, 4, "ALL_ELASTIC_OK")

@@ -1,0 +1,390 @@
+"""Fault-injection invariants shared by BOTH execution backends (PR 6).
+
+One seeded :class:`FaultPlan` — a machine crash with MTTR plus a
+transient task failure — drives a SimBackend session and a LiveBackend
+session whose virtual timelines are made identical (the sim session
+schedules the live jobs' own WorkerSpec estimates; the live session's
+scripted timer measures exactly those estimates).  The same checker
+pins, for both:
+
+* no task interval overlaps a crashed machine's downtime,
+* every fault-killed task identity is re-executed exactly once,
+* recovery restores from the *latest* checkpoint: everything since the
+  snapshot is re-done, nothing is skipped,
+* transient failures retry exactly once and the session still completes,
+
+and — because the runtime's fault logic is backend-agnostic on a virtual
+clock — the two backends produce the *same* schedule for the same plan.
+With faults disabled the runtime's results are byte-identical to a run
+with no fault plumbing at all.
+"""
+import itertools
+from collections import Counter
+
+import pytest
+
+from repro.cluster import (ClusterRuntime, DegradePolicy, FaultPlan,
+                           HealthMonitor, SimBackend, TaskFailedError)
+from repro.cluster.runtime import JobSpec, WorkerSpec
+from repro.jigsaw.costmodel import v100_profiles
+from repro.jigsaw.schedulers import JigsawScheduler
+from repro.jigsaw.trace import generate_trace
+
+EPS = 1e-9
+
+# the one plan both backends run (times in virtual seconds): machine 0
+# dies at t=3.5 and rejoins at 4.5; job 1 worker 0's iteration-1 task
+# fails transiently halfway through its first attempt
+PLAN = FaultPlan.parse("crash:0@3.5+1.0;fail:1.0@1", restore_s=0.25)
+ITERS, MACHINES, CKPT_EVERY = 6, 2, 2
+
+
+# ---------------------------------------------------------------------------
+# The shared fault-invariant checker (one suite, two backends)
+# ---------------------------------------------------------------------------
+
+def check_fault_invariants(res, jobs, plan):
+    # (0) faults delayed but did not lose the session: every job finished
+    assert len(res.jct) == len(jobs)
+    assert not res.failed_jobs
+    assert res.crashes == len(plan.crashes)
+    # (1) no task runs on a crashed machine during its downtime
+    for c in plan.crashes:
+        for m, s, e, *_id in res.schedule:
+            if m == c.machine:
+                assert e <= c.at + EPS or s >= c.repaired_at - EPS, \
+                    f"task [{s:.2f},{e:.2f}) overlaps downtime of {c}"
+    # (2) machine exclusivity survives kills and retries
+    by_machine = {}
+    for m, s, e, *_id in res.schedule:
+        by_machine.setdefault(m, []).append((s, e))
+    for ivs in by_machine.values():
+        ivs.sort()
+        for (_s1, e1), (s2, _e2) in zip(ivs, ivs[1:]):
+            assert s2 >= e1 - EPS
+    # (3) every fault-killed task identity re-executes exactly once after
+    # its (last) kill
+    last_kill = {}
+    for j, w, i, _m, t in res.killed_tasks:
+        last_kill[(j, w, i)] = max(t, last_kill.get((j, w, i), -1.0))
+    assert last_kill, "the crash must have killed in-flight work"
+    for ident, tk in last_kill.items():
+        reruns = [s for _m, s, _e, j, w, i in res.schedule
+                  if (j, w, i) == ident and s >= tk - EPS]
+        assert len(reruns) == 1, (ident, reruns)
+    # (4) nothing is skipped: every (job, worker, iteration) identity ran,
+    # and each rolled-back job re-did the iterations since its snapshot
+    counts = Counter((j, w, i) for _m, _s, _e, j, w, i in res.schedule)
+    for job in jobs:
+        for it in range(job.iterations):
+            for w in range(job.num_workers):
+                assert counts[(job.job_id, w, it)] >= 1, (job.job_id, w, it)
+    for jid, lost in res.lost_iterations.items():
+        if lost:        # lost completed iterations show up as re-runs
+            redone = sum(1 for (j, _w, _i), n in counts.items()
+                         if j == jid and n >= 2)
+            assert redone >= lost
+    # (5) each transient failure retried exactly once
+    for ident in set(res.retried_tasks):
+        assert res.retried_tasks.count(ident) == 1
+    # (6) lost work is priced: goodput strictly below util, and the
+    # recovery window of every rolled-back job was measured
+    assert res.wasted_s > 0.0
+    assert res.goodput < res.util
+    for jid in res.lost_iterations:
+        assert res.recovery_s.get(jid, 0.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Backend sessions under the SAME plan (module-scoped: live compiles once)
+# ---------------------------------------------------------------------------
+
+def _session_kwargs():
+    return dict(num_machines=MACHINES, gamma=0.05, horizon=1e9,
+                record_schedule=True, faults=PLAN, ckpt_every=CKPT_EVERY)
+
+
+def _live_jobs():
+    """Two single-worker jobs with unit step estimates.  The sim session
+    schedules exactly these specs; the live session executes them with a
+    scripted timer measuring exactly 1.0s — identical virtual timelines."""
+    from repro.cluster.live import make_live_job
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import reduced_config
+
+    cfg = reduced_config("yi-6b")
+    return [
+        make_live_job(i, arrival=0.0, cfg=cfg, iterations=ITERS,
+                      num_workers=1, batch=2, seq=16, est_step_s=1.0,
+                      model_size_gb=0.01,
+                      tcfg=TrainConfig(optimizer="adamw", learning_rate=3e-3,
+                                       num_steps=4 * ITERS, seed=i),
+                      spb=SPBConfig(mode="temporal", k=2))
+        for i in range(2)]
+
+
+class _ScriptedTimer:
+    """Deterministic perf_counter stand-in: every (t0, t1) call pair
+    measures exactly the next scripted duration (here: always 1.0s)."""
+
+    def __init__(self, durations):
+        self._durs = durations
+        self._t = 0.0
+        self._mid = False
+
+    def __call__(self):
+        if self._mid:
+            self._t += next(self._durs)
+        self._mid = not self._mid
+        return self._t
+
+
+@pytest.fixture(scope="module")
+def sim_fault_session():
+    jobs = [lj.spec for lj in _live_jobs()]
+    res = ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                         **_session_kwargs()).run()
+    return res, jobs, None
+
+
+@pytest.fixture(scope="module")
+def live_fault_session(tmp_path_factory):
+    from repro.cluster.live import LiveBackend
+
+    backend = LiveBackend(_live_jobs(),
+                          timer=_ScriptedTimer(itertools.repeat(1.0)),
+                          ckpt_dir=str(tmp_path_factory.mktemp("ckpt")))
+    res = ClusterRuntime(backend.specs(), JigsawScheduler(), backend,
+                         **_session_kwargs()).run()
+    backend.close()
+    return res, backend.specs(), backend
+
+
+@pytest.fixture(params=["sim", "live"])
+def fault_session(request, sim_fault_session, live_fault_session):
+    return (sim_fault_session if request.param == "sim"
+            else live_fault_session)
+
+
+def test_fault_invariants_both_backends(fault_session):
+    """The acceptance criterion: one invariant suite, the same injected
+    FaultPlan, both backends."""
+    res, jobs, _ = fault_session
+    check_fault_invariants(res, jobs, PLAN)
+
+
+def test_same_plan_same_schedule_on_both_backends(sim_fault_session,
+                                                  live_fault_session):
+    """Fault injection rides the *virtual* clock, so with matching step
+    durations the DES and the live pool make identical fault decisions —
+    schedules, kills, retries and rollback accounting all agree."""
+    sim_res, _, _ = sim_fault_session
+    live_res, _, _ = live_fault_session
+    assert live_res.schedule == sim_res.schedule
+    assert live_res.killed_tasks == sim_res.killed_tasks
+    assert live_res.retried_tasks == sim_res.retried_tasks
+    assert live_res.lost_iterations == sim_res.lost_iterations
+    assert live_res.jct == sim_res.jct
+
+
+def test_live_restored_from_checkpoint(live_fault_session):
+    """The crashed live job really went through CheckpointManager: one
+    restore, rolled back to the latest pre-crash snapshot, the step
+    counter rewound so the re-done iterations re-ran the same batches."""
+    res, jobs, backend = live_fault_session
+    rolled = [jid for jid, lost in res.lost_iterations.items() if lost > 0]
+    assert rolled
+    for jid in rolled:
+        assert backend.restores.get(jid, 0) >= 1
+        assert backend.ckpt_mgrs[jid].steps(), "snapshots must be durable"
+    # after the rewind, each job's engine ran its logical step count:
+    # killed/redone steps replaced, not duplicated, in steps_run
+    for job in jobs:
+        assert backend.steps_run[job.job_id] == \
+            job.iterations * job.num_workers
+
+
+# ---------------------------------------------------------------------------
+# Fault-free runs are byte-identical to the unplumbed runtime
+# ---------------------------------------------------------------------------
+
+def test_disabled_faults_change_nothing():
+    """faults=None and an *empty* FaultPlan produce results identical in
+    every historical field — the fault path costs existing users nothing
+    — and goodput degenerates to util."""
+    jobs = generate_trace(num_jobs=10, seed=4, db=v100_profiles(),
+                          mean_arrival_s=1.0, min_iters=5, max_iters=20,
+                          spb=True)
+    base = ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                          num_machines=18, gamma=2.0, horizon=5.0,
+                          record_schedule=True).run()
+    empty = ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                           num_machines=18, gamma=2.0, horizon=5.0,
+                           record_schedule=True, faults=FaultPlan()).run()
+    for f in ("makespan", "jct", "migrations", "total_iterations",
+              "machine_busy", "util", "schedule"):
+        assert getattr(empty, f) == getattr(base, f), f
+    for res in (base, empty):
+        assert res.goodput == res.util
+        assert res.wasted_s == 0.0
+        assert res.crashes == 0 and not res.killed_tasks
+        assert not res.failed_jobs and not res.lost_iterations
+
+
+# ---------------------------------------------------------------------------
+# Deterministic rollback arithmetic + checkpoint-cadence hooks
+# ---------------------------------------------------------------------------
+
+class _RecordingBackend(SimBackend):
+    def __init__(self):
+        self.checkpoints = []
+        self.rollbacks = []
+
+    def job_checkpoint(self, job, iteration, now):
+        self.checkpoints.append((job.job_id, iteration, now))
+
+    def job_rollback(self, job, to_iteration, now):
+        self.rollbacks.append((job.job_id, to_iteration, now))
+
+
+def test_rollback_restores_latest_checkpoint_exactly():
+    """Single job, unit iterations, ckpt_every=2, crash at t=3.5: the
+    snapshot at iteration 2 is the restore point, iteration 3's in-flight
+    task is killed, one completed iteration (2) is lost and re-done."""
+    job = JobSpec(0, 0.0, "m", 0.01, 5, [WorkerSpec(1.0, 0.5)])
+    plan = FaultPlan.parse("crash:0@3.5+1.0", restore_s=0.25)
+    backend = _RecordingBackend()
+    res = ClusterRuntime([job], JigsawScheduler(), backend,
+                         num_machines=1, gamma=0.0, horizon=1e9,
+                         record_schedule=True, faults=plan,
+                         ckpt_every=2).run()
+    # cadence fired at iteration 2 (pre-crash) and 4 (on the redo pass)
+    assert [it for _j, it, _t in backend.checkpoints] == [2, 4]
+    assert backend.rollbacks == [(0, 2, 3.5)]
+    assert res.lost_iterations == {0: 1}        # iteration 2's completion
+    assert res.killed_tasks == [(0, 0, 3, 0, 3.5)]
+    # machine is down until 4.5; the re-spawned iteration 2 starts then
+    redo = [s for _m, s, _e, _j, _w, i in res.schedule if i == 2 and s > 3.0]
+    assert redo == [4.5]
+    # iterations 2,3,4 re-run back-to-back: makespan 4.5 + 3
+    assert res.makespan == pytest.approx(7.5)
+    # recovery: rolled back at 3.5, re-reached 3 completed iters at 5.5
+    assert res.recovery_s[0] == pytest.approx(2.0)
+    # wasted: 0.5s of iteration 3 executed before the crash, plus the
+    # completed-but-unsnapshotted 1.0s of iteration 2's first run
+    assert res.wasted_s == pytest.approx(1.5)
+    assert res.goodput < res.util
+    # the killed task's schedule entry is truncated at the crash instant
+    it3 = sorted((s, e) for _m, s, e, _j, _w, i in res.schedule if i == 3)
+    assert it3 == [(3.0, 3.5), (5.5, 6.5)]
+
+
+def test_transient_failure_retries_exactly_once():
+    job = JobSpec(0, 0.0, "m", 0.01, 3, [WorkerSpec(1.0, 0.5)])
+    plan = FaultPlan.parse("fail:0.0@1")
+    res = ClusterRuntime([job], JigsawScheduler(), SimBackend(),
+                         num_machines=1, gamma=0.0, horizon=1e9,
+                         record_schedule=True, faults=plan).run()
+    assert res.retried_tasks == [(0, 0, 1)]
+    # iteration 1 shows up twice: the 0.5s partial and the full re-run
+    runs = sorted((s, e) for _m, s, e, _j, _w, i in res.schedule if i == 1)
+    assert runs == [(1.0, 1.5), (1.5, 2.5)]
+    assert res.makespan == pytest.approx(3.5)
+    assert res.wasted_s == pytest.approx(0.5)
+    assert len(res.jct) == 1
+
+
+class _FailingBackend(SimBackend):
+    """Fails every attempt of job ``fail_job`` from its third accepted
+    task on — a live job whose retry budget is exhausted."""
+
+    def __init__(self, fail_job=1):
+        self.fail_job = fail_job
+        self.seen = 0
+
+    def run_task(self, job, task, machine, start, migrated, ctx=None):
+        if job.job_id == self.fail_job:
+            self.seen += 1
+            if self.seen > 2:
+                raise TaskFailedError(job.job_id, "injected NCCL death",
+                                      elapsed_s=0.75)
+        return super().run_task(job, task, machine, start, migrated,
+                                ctx=ctx)
+
+
+def test_exhausted_retries_fail_job_gracefully():
+    """TaskFailedError fails ONE job; the rest of the pool completes."""
+    jobs = [JobSpec(i, 0.0, "m", 0.01, 4, [WorkerSpec(1.0, 0.5)])
+            for i in range(3)]
+    res = ClusterRuntime(jobs, JigsawScheduler(), _FailingBackend(),
+                         num_machines=3, gamma=0.0, horizon=1e9,
+                         record_schedule=True, faults=FaultPlan()).run()
+    assert res.failed_jobs == [1]
+    assert sorted(res.jct) == [0, 2]            # survivors finished
+    # waste = the doomed 0.75s attempt + job 1's two completed (never
+    # checkpointed) iterations
+    assert res.wasted_s == pytest.approx(2.75)
+    assert res.goodput < res.util
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection -> SPB depth degradation recovers goodput
+# ---------------------------------------------------------------------------
+
+def test_degradation_recovers_goodput_under_straggler():
+    """The paper's recovery knob: under the same straggler plan, jigsaw
+    with HealthMonitor+DegradePolicy finishes sooner than without
+    degradation, by snapping the slow machine's tasks to shallower SPB
+    depths (gang schedulers cannot do this)."""
+    jobs = generate_trace(num_jobs=8, seed=11, db=v100_profiles(),
+                          mean_arrival_s=1.0, min_iters=8, max_iters=16,
+                          spb=True)
+    plan = FaultPlan.parse("slow:1@0-1e9x5")
+
+    def run(degrade):
+        kw = {}
+        if degrade:
+            kw = dict(health=HealthMonitor(min_samples=2),
+                      degrade=DegradePolicy())
+        return ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                              num_machines=10, gamma=2.0, horizon=5.0,
+                              faults=plan, **kw).run()
+
+    plain, degraded = run(False), run(True)
+    assert degraded.degraded_steps > 0
+    assert plain.degraded_steps == 0
+    assert degraded.makespan <= plain.makespan
+    assert sum(degraded.jct.values()) < sum(plain.jct.values())
+
+
+def test_scheduler_never_places_on_down_machine():
+    """JigsawScheduler skips machines in ``state.down`` (and the runtime
+    rejects such placements as a second line of defense)."""
+    jobs = [JobSpec(i, 0.0, "m", 0.01, 6, [WorkerSpec(1.0, 0.5)])
+            for i in range(2)]
+    plan = FaultPlan.parse("crash:0@0.5+100")   # m0 gone for the session
+    res = ClusterRuntime(jobs, JigsawScheduler(), SimBackend(),
+                         num_machines=2, gamma=0.0, horizon=1e9,
+                         record_schedule=True, faults=plan).run()
+    assert len(res.jct) == 2                    # both finish on machine 1
+    assert all(m == 1 for m, s, _e, _j, _w, _i in res.schedule if s > 0.5)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan construction
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_rejects_bad_specs():
+    for bad in ("crash:zzz@1+2", "melt:0@1", "slow:1@abc", "fail:1@2"):
+        with pytest.raises(ValueError, match="bad fault event"):
+            FaultPlan.parse(bad)
+
+
+def test_fault_plan_generate_is_seed_deterministic():
+    kw = dict(machines=6, duration_s=300.0, crash_rate=0.5, mttr_s=20.0,
+              slow_rate=0.3, fail_keys=((0, 0, 1), (1, 0, 2)),
+              fail_prob=0.5)
+    assert FaultPlan.generate(seed=3, **kw) == FaultPlan.generate(seed=3,
+                                                                  **kw)
+    assert FaultPlan.generate(seed=3, **kw) != FaultPlan.generate(seed=4,
+                                                                  **kw)

@@ -192,6 +192,72 @@ def test_aot_import_rejects_mesh_mismatch(tmp_path):
     assert aot_lib.import_table(path, expect_mesh=src.mesh)
 
 
+def test_aot_corruption_is_a_cache_miss(tmp_path):
+    """Damaged cache entries degrade to a cold cache, never a crash:
+    import_table raises typed errors (AOTCorruptError for garbage bytes,
+    FileNotFoundError for a manifest that promises a missing entry) and
+    SPBEngine.load_aot maps both to False, after which the engine simply
+    re-traces.  Genuine topology mismatches still raise loudly."""
+    from repro.engine import aot as aot_lib
+    cfg, tcfg, spb = _setup(k=2)
+    batch = make_batch(cfg, 2, 32)
+    src = SPBEngine(cfg, tcfg, spb)
+    src.compile_table(src.batch_specs_like(batch), depths=[2])
+    path = Path(src.export_aot(tmp_path / "table"))
+    good_manifest = (path / "manifest.json").read_text()
+    good_entry = (path / "step_2.bin").read_bytes()
+
+    # unparseable manifest
+    (path / "manifest.json").write_text("{ not json")
+    with pytest.raises(aot_lib.AOTCorruptError):
+        aot_lib.import_table(path)
+    assert not SPBEngine(cfg, tcfg, spb).load_aot(path)
+
+    # parseable but not an object
+    (path / "manifest.json").write_text("[1, 2]")
+    with pytest.raises(aot_lib.AOTCorruptError):
+        aot_lib.import_table(path)
+    (path / "manifest.json").write_text(good_manifest)
+
+    # truncated executable payload
+    (path / "step_2.bin").write_bytes(good_entry[:16])
+    with pytest.raises(aot_lib.AOTCorruptError):
+        aot_lib.import_table(path)
+    assert not SPBEngine(cfg, tcfg, spb).load_aot(path)
+
+    # manifest promises an entry that is gone
+    (path / "step_2.bin").unlink()
+    with pytest.raises(FileNotFoundError):
+        aot_lib.import_table(path)
+    assert not SPBEngine(cfg, tcfg, spb).load_aot(path)
+    (path / "step_2.bin").write_bytes(good_entry)
+
+    # AOTCorruptError IS an AOTCompatError: best-effort callers need one
+    # except clause, while mismatch handling stays intact
+    assert issubclass(aot_lib.AOTCorruptError, aot_lib.AOTCompatError)
+    assert aot_lib.import_table(path)       # repaired cache loads again
+
+
+def test_engine_retraces_after_corrupt_aot_cache(tmp_path):
+    """End-to-end fallback: an engine pointed at a corrupt cache reports
+    a miss and then trains by re-tracing, producing the same first-step
+    metrics as the engine that exported the table."""
+    cfg, tcfg, spb = _setup(k=2)
+    batch = make_batch(cfg, 2, 32)
+    src = SPBEngine(cfg, tcfg, spb)
+    src.compile_table(src.batch_specs_like(batch), depths=[2])
+    path = Path(src.export_aot(tmp_path / "table"))
+    src.init_state(jax.random.key(0))
+    want = float(src.train_step(batch, 0)["xent"])
+
+    (path / "manifest.json").write_text("\\x00garbage")
+    dst = SPBEngine(cfg, tcfg, spb)
+    assert not dst.load_aot(path)           # miss, not an exception
+    dst.init_state(jax.random.key(0))
+    got = float(dst.train_step(batch, 0)["xent"])    # re-traced fine
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
 def test_aot_roundtrip_fresh_process(tmp_path):
     """A fresh process imports the serialized step table and runs a train
     step with tracing poisoned — proof that execution comes from the
