@@ -1,4 +1,5 @@
-"""Batched serving example: prefill + KV-cache decode on the host mesh.
+"""Continuous-batching serving example: staggered arrivals share one
+persistent decode step over a paged KV cache (see docs/serving.md).
 
   PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b
 """
@@ -10,10 +11,12 @@ from repro.launch.serve import serve
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
     args = ap.parse_args()
-    serve(["--arch", args.arch, "--batch", str(args.batch),
-           "--prompt-len", "64", "--gen", "16"])
+    serve(["--arch", args.arch, "--slots", str(args.slots),
+           "--requests", str(args.requests), "--arrive-every", "3",
+           "--prompt-len", "16", "--max-new", "12"])
 
 
 if __name__ == "__main__":

@@ -121,6 +121,58 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig,
 
 
 # ---------------------------------------------------------------------------
+# Decode-phase serving roofline (bandwidth-bound tokens/s ceiling)
+# ---------------------------------------------------------------------------
+
+def _elem_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype in ("bfloat16", "float16") else 4
+
+
+def decode_kv_bytes(cfg: ModelConfig, context: int) -> float:
+    """Bytes of KV cache ONE slot streams per decode step at ``context``.
+
+    attn layers read the full context, local layers at most the window,
+    MLA layers the latent (ckv + rope-k) rows; recurrent mixers carry
+    O(1) state and are negligible here."""
+    elem = _elem_bytes(cfg)
+    total = 0.0
+    for mixer, _ in layer_kinds(cfg):
+        if mixer == "mla":
+            total += context * (cfg.mla.kv_lora_rank
+                                + cfg.mla.qk_rope_head_dim) * elem
+            continue
+        if mixer in ("attn", "xdec"):
+            span = context
+        elif mixer == "local":
+            span = min(context, cfg.window)
+        else:
+            continue
+        total += span * 2 * cfg.num_kv_heads * cfg.head_dim * elem
+    return total
+
+
+def decode_bandwidth_bound(cfg: ModelConfig, batch: int, context: int, *,
+                           bw: float = HBM_BW) -> float:
+    """Bandwidth-bound decode throughput ceiling in tokens/s.
+
+    Each decode step streams the (active) weights once — amortized over
+    the whole batch, which is why continuous batching pays — plus every
+    slot's KV context:
+
+        tokens/s <= batch * BW / (weight_bytes + batch * kv_bytes(ctx))
+
+    The weight term uses active params (MoE: top_k/E of the experts)
+    plus the embedding/unembedding matrix, all in the model dtype.  This
+    is the serving lane's analogue of the training roofline above: the
+    measured BENCH_serve.json numbers report their distance to it.
+    """
+    counts = count_params(cfg)
+    wbytes = (counts["active"] + counts["embed"]) * _elem_bytes(cfg)
+    kv = decode_kv_bytes(cfg, context)
+    return batch * bw / (wbytes + batch * kv)
+
+
+# ---------------------------------------------------------------------------
 # Pipeline-parallel terms (schedule-table driven)
 # ---------------------------------------------------------------------------
 

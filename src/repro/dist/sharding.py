@@ -215,6 +215,49 @@ def cache_pspec(cache_shapes: Any, mesh=None) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Serving-state PartitionSpecs (paged KV pool + slot bookkeeping)
+# ---------------------------------------------------------------------------
+
+def _paged_spec(path, leaf, mesh) -> P:
+    """Paged pool leaves: any physical page can belong to any slot, so the
+    page dim must NOT shard over a data axis (the batch rule in
+    :func:`_cache_spec` assumes dim order (count, B, ...), which a paged
+    pool does not have).  Only the KV-head dim shards, over ``model`` —
+    the same axis its projection weights use."""
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    nd = len(leaf.shape)
+    if name in ("k", "v") and nd >= 4:
+        # stacked (count, pages, page_size, Hkv, Dh)
+        return spec_for((None,) * (nd - 2) + ("heads", None), mesh=mesh)
+    return P()                  # mla ckv/kr pages: latent dims, replicated
+
+
+def paged_cache_pspec(cache_shapes: Any, mesh=None) -> Any:
+    """PartitionSpec pytree for a serve-engine paged KV pool."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _paged_spec(path, leaf, mesh), cache_shapes)
+
+
+def serve_state_pspec(state_shapes: Any, mesh=None) -> Any:
+    """Specs for the full ServeEngine device state: the paged pool per
+    :func:`paged_cache_pspec`; the slot-wise bookkeeping arrays (page
+    table, positions, masks, output buffer, rng) are tiny and replicated
+    so admission scatters touch no cross-device layout."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    out = {}
+    for key, sub in state_shapes.items():
+        if key == "groups":
+            out[key] = paged_cache_pspec(sub, mesh=mesh)
+        else:
+            out[key] = jax.tree.map(lambda _: P(), sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Train-state PartitionSpecs (ZeRO-1 optimizer-state sharding)
 # ---------------------------------------------------------------------------
 

@@ -82,8 +82,9 @@ def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
     """Digest identifying one compiled step table.
 
     Only fields that reach the compiled program participate — checkpoint /
-    logging knobs don't invalidate the cache."""
-    train = dataclasses.asdict(tcfg)
+    logging knobs don't invalidate the cache.  ``tcfg``/``spb`` may be
+    None for tables with no training/SPB leg (the serve engine)."""
+    train = dataclasses.asdict(tcfg) if tcfg is not None else {}
     for k in ("checkpoint_every", "checkpoint_dir", "keep_checkpoints",
               "log_every"):
         train.pop(k, None)
@@ -94,7 +95,7 @@ def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
         "fmt": _FMT_VERSION,
         "model": dataclasses.asdict(cfg),
         "train": train,
-        "spb": dataclasses.asdict(spb),
+        "spb": dataclasses.asdict(spb) if spb is not None else {},
         "batch": _shape_sig(batch_shapes),
         "zero1": zero1,
         "donate": donate,

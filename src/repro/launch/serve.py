@@ -1,23 +1,36 @@
-"""Batched serving driver: prefill a prompt batch, decode with the KV
-cache, report tokens/s.  Runs reduced configs on the CPU host mesh; the
-full configs are exercised by the dry-run (launch/dryrun.py).
+"""Serving client: replays an arrival trace through the continuous-
+batching :class:`~repro.serve.ServeEngine`.
 
-  python -m repro.launch.serve --arch gemma3-4b --batch 4 --prompt-len 64 \\
-      --gen 32
+The engine (``repro.serve``) owns params, the paged KV cache and the
+persistent decode step; this driver is only a client — it generates
+prompts, schedules arrivals (deterministic every-N-steps or a seeded
+Poisson process), pumps the engine and reports per-request latency +
+throughput.
+
+  python -m repro.launch.serve --arch yi-6b --requests 6 --arrive-every 3
+  python -m repro.launch.serve --arch yi-6b --requests 8 --poisson 0.4 \\
+      --aot-cache /tmp/serve_aot
 """
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.data.pipeline import MarkovLM
-from repro.launch.mesh import make_host_mesh
-from repro.models import lm
+from repro.serve import ServeEngine, default_geometry
+
+
+def _arrival_steps(args) -> list:
+    """Engine-step arrival times for each request (deterministic trace)."""
+    if args.poisson > 0:
+        rng = np.random.default_rng(args.seed + 7)
+        gaps = rng.exponential(1.0 / args.poisson, size=args.requests)
+        return np.floor(np.cumsum(gaps)).astype(int).tolist()
+    return [i * args.arrive_every for i in range(args.requests)]
 
 
 def serve(argv=None):
@@ -25,84 +38,78 @@ def serve(argv=None):
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--arrive-every", type=int, default=3,
+                    help="deterministic trace: request i arrives at "
+                         "engine step i*N (requests overlap mid-decode)")
+    ap.add_argument("--poisson", type=float, default=0.0,
+                    help="mean arrivals per engine step; overrides "
+                         "--arrive-every with a seeded Poisson trace")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--watermark", type=float, default=1.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (placement-invariant outputs)")
     ap.add_argument("--seed", type=int, default=0)
-    # --greedy used to be store_true with default True, so it could never
-    # be turned off; sampling is now the explicit opt-in.
-    ap.add_argument("--sample", action="store_true", default=False,
-                    help="sample from the softmax instead of greedy argmax")
-    ap.add_argument("--greedy", dest="sample", action="store_false",
-                    help="greedy argmax decode (the default)")
-    ap.add_argument("--temperature", type=float, default=1.0,
-                    help="softmax temperature for --sample (> 0)")
+    ap.add_argument("--poll-every", type=int, default=2)
+    ap.add_argument("--aot-cache", default=None,
+                    help="AOT table root: import the serve executables "
+                         "if present, else compile and export them")
     args = ap.parse_args(argv)
-    if args.sample and args.temperature <= 0:
-        ap.error("--temperature must be > 0 when sampling")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    mesh = make_host_mesh()
-    max_len = args.prompt_len + args.gen
-    gen = MarkovLM(cfg.vocab_size, seed=args.seed)
-    prompts = jnp.asarray(
-        gen.sample(args.batch, args.prompt_len, step=0)[:, :-1], jnp.int32)
+    geom = default_geometry(num_slots=args.slots, page_size=args.page_size,
+                            max_context=args.max_context)
+    engine = ServeEngine(cfg, geom=geom, seed=args.seed,
+                         watermark=args.watermark)
+    print(f"[serve] arch={cfg.name} slots={geom.num_slots} "
+          f"page={geom.page_size} pool={geom.num_pages - 1} pages "
+          f"buckets={list(engine.buckets)}")
 
-    with jax.sharding.set_mesh(mesh):
-        params = lm.init_lm(jax.random.key(args.seed), cfg)
-        cache = lm.init_cache(cfg, args.batch, max_len,
-                              enc_len=args.prompt_len if cfg.enc_layers else 0)
-        batch = {"tokens": prompts}
-        if cfg.enc_layers:
-            rng = np.random.default_rng(args.seed)
-            batch["frames"] = jnp.asarray(
-                rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)) * 0.1,
-                jnp.dtype(cfg.dtype))
-        if cfg.frontend:
-            rng = np.random.default_rng(args.seed)
-            batch["frontend"] = jnp.asarray(
-                rng.normal(size=(args.batch, cfg.frontend_tokens, cfg.d_model)) * 0.1,
-                jnp.dtype(cfg.dtype))
-
-        prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
-        decode = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg))
-
-        # temperature is threaded through a jitted token picker so the
-        # sampled path stays on-device (no host round-trip per token)
-        if args.sample:
-            pick = jax.jit(lambda lg, k: jax.random.categorical(
-                k, lg[..., :cfg.vocab_size] / args.temperature,
-                axis=-1).astype(jnp.int32))
+    if args.aot_cache:
+        path = engine.aot_cache_path(args.aot_cache)
+        if engine.load_aot(path):
+            print(f"[serve] serve AOT table loaded from {path} (no retrace)")
         else:
-            pick = jax.jit(lambda lg, k: jnp.argmax(
-                lg[..., :cfg.vocab_size], axis=-1).astype(jnp.int32))
-        sample_key = jax.random.key(args.seed + 1)
+            engine.compile_table()
+            engine.export_aot(path)
+            print(f"[serve] serve AOT table compiled + exported to {path}")
 
-        t0 = time.time()
-        logits, cache = prefill(params, batch, cache)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
+    gen = MarkovLM(cfg.vocab_size, seed=args.seed)
+    prompts = gen.sample(args.requests, args.prompt_len + 1,
+                         step=0)[:, :args.prompt_len]
+    pending = deque(zip(_arrival_steps(args), prompts.tolist()))
 
-        sample_key, k0 = jax.random.split(sample_key)
-        tok = pick(logits, k0)
-        out_tokens = [tok]
-        t0 = time.time()
-        for _ in range(args.gen - 1):
-            logits, cache = decode(params, cache, tok)
-            sample_key, ki = jax.random.split(sample_key)
-            tok = pick(logits, ki)
-            out_tokens.append(tok)
-        tok.block_until_ready()
-        t_decode = time.time() - t0
+    done, total = [], args.requests
+    t0 = time.time()
+    while pending or engine.scheduler.queue or engine._live:
+        while pending and pending[0][0] <= engine.clock:
+            _, prompt = pending.popleft()
+            engine.submit(prompt, max_new=args.max_new,
+                          temperature=args.temperature)
+        engine.step(1)
+        if engine.scheduler.queue or engine.clock % args.poll_every == 0:
+            done.extend(engine.poll())
+    done.extend(engine.poll())
+    wall = time.time() - t0
 
-    seq = jnp.concatenate(out_tokens, axis=1)
-    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    mode = f"sample(T={args.temperature:g})" if args.sample else "greedy"
-    print(f"[serve] arch={cfg.name} batch={args.batch} {mode} "
-          f"prefill({args.prompt_len} tok)={t_prefill*1e3:.1f}ms "
-          f"decode={args.gen-1}steps {tps:.1f} tok/s")
-    print(f"[serve] sample continuation ids: {np.asarray(seq[0, :16])}")
-    return np.asarray(seq)
+    for req in sorted(done, key=lambda r: r.rid):
+        print(f"[serve] req {req.rid}: {len(req.output)} tok, arrived "
+              f"step {req.arrived_step}, admitted {req.admitted_step}, "
+              f"finished {req.finished_step} "
+              f"(latency {req.finished_step - req.arrived_step} steps)")
+    st = engine.stats()
+    new_tokens = sum(len(r.output) for r in done)
+    print(f"[serve] completed={len(done)}/{total} steps={engine.clock} "
+          f"decode_steps={st['decode_steps']} "
+          f"tokens/s={new_tokens / max(wall, 1e-9):.1f}")
+    print(f"[serve] slots_reused={st['slots_reused']} "
+          f"slot_uses={st['slot_uses']} pages_alloc={st['page_allocs']} "
+          f"pages_freed={st['page_frees']} free_pages={st['free_pages']}")
+    return done
 
 
 if __name__ == "__main__":

@@ -482,6 +482,142 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
 
 
 # ---------------------------------------------------------------------------
+# Paged (block-table) attention: the serving engine's cache views
+# ---------------------------------------------------------------------------
+#
+# The serve cache is a flat pool of fixed-size pages shared by all slots
+# (repro.serve.kvcache).  Prefill scatters a prompt's K/V through one
+# slot's page list; decode scatters the new token and gathers the slot's
+# logical view ``pages[page_table]`` for the attention read.  Positions
+# beyond ``pos`` (including unallocated trash-page entries) are masked to
+# -inf, so garbage contributes exp(-inf) == 0 — exactly nothing — and
+# slots stay bit-isolated from each other.
+
+def _paged_scatter(pages: Array, rows: Array, positions: Array, valid: Array,
+                   values: Array) -> Array:
+    """Write ``values`` at logical ``positions`` of per-entry page ``rows``.
+
+    pages: (P, ps, ...); rows: physical page id per entry; positions:
+    logical token positions (same shape as rows); valid: bool mask —
+    invalid entries are routed to the trash page (never allocated, never
+    read unmasked).  values: positions.shape + pages.shape[2:].
+    """
+    ps = pages.shape[1]
+    phys = jnp.where(valid, rows, 0)
+    return pages.at[phys, positions % ps].set(values.astype(pages.dtype))
+
+
+def attention_prefill_paged(p: Params, x: Array, cfg: ModelConfig, *,
+                            kind: str, positions: Array, cache: Params,
+                            page_row: Array, valid_len: Array
+                            ) -> Tuple[Array, Params]:
+    """Single-slot prefill into a paged cache.  x: (1, S, D) with the
+    prompt right-padded to S; ``valid_len`` (traced scalar) marks how many
+    leading positions are real — pad positions are computed (causally
+    harmless) but their K/V goes to the trash page."""
+    B, S, D = x.shape
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (x @ p["wk"]).reshape(B, S, K, Dh)
+    v = (x @ p["wv"]).reshape(B, S, K, Dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window if kind == "local" else 0
+    o = blockwise_attention(q, k, v, causal=True, window=window,
+                            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    ps = cache["k"].shape[1]
+    rows = page_row[positions // ps]
+    valid = positions < valid_len
+    newk = _paged_scatter(cache["k"], rows, positions, valid, k[0])
+    newv = _paged_scatter(cache["v"], rows, positions, valid, v[0])
+    return o.reshape(B, S, H * Dh) @ p["wo"], {"k": newk, "v": newv}
+
+
+def attention_decode_paged(p: Params, x: Array, cfg: ModelConfig, *,
+                           kind: str, pos: Array, cache: Params,
+                           page_table: Array, active: Array
+                           ) -> Tuple[Array, Params]:
+    """Slot-batched one-token decode over a paged cache.
+
+    x: (N, 1, D); pos: (N,) per-slot absolute positions; page_table:
+    (N, Pmax) physical page ids (0 = unallocated); active: (N,) bool —
+    inactive slots compute (and discard) but write only to the trash page.
+    """
+    N = x.shape[0]
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(N, 1, H, Dh)
+    k = (x @ p["wk"]).reshape(N, 1, K, Dh)
+    v = (x @ p["wv"]).reshape(N, 1, K, Dh)
+    posv = pos[:, None]
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    ps = cache["k"].shape[1]
+    rows = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    newk = _paged_scatter(cache["k"], rows, pos, active, k[:, 0])
+    newv = _paged_scatter(cache["v"], rows, pos, active, v[:, 0])
+    # gather the slot's logical view: (N, Pmax*ps, K, Dh)
+    kview = newk[page_table].reshape(N, -1, K, Dh)
+    vview = newv[page_table].reshape(N, -1, K, Dh)
+    W = kview.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(W)[None], (N, W))
+    window = cfg.window if kind == "local" else 0
+    o = decode_attention(q, kview.astype(q.dtype), vview.astype(q.dtype),
+                         kpos, pos, window=window)
+    return o.reshape(N, 1, H * Dh) @ p["wo"], {"k": newk, "v": newv}
+
+
+def mla_prefill_paged(p: Params, x: Array, cfg: ModelConfig, *,
+                      positions: Array, cache: Params, page_row: Array,
+                      valid_len: Array) -> Tuple[Array, Params]:
+    """Single-slot MLA prefill into paged latent caches (x: (1, S, D))."""
+    out = mla_fwd(p, x, cfg, positions=positions)
+    ckv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+    kr = rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    ps = cache["ckv"].shape[1]
+    rows = page_row[positions // ps]
+    valid = positions < valid_len
+    newc = _paged_scatter(cache["ckv"], rows, positions, valid, ckv[0])
+    newr = _paged_scatter(cache["kr"], rows, positions, valid, kr[0])
+    return out, {"ckv": newc, "kr": newr}
+
+
+def mla_decode_paged(p: Params, x: Array, cfg: ModelConfig, *, pos: Array,
+                     cache: Params, page_table: Array, active: Array
+                     ) -> Tuple[Array, Params]:
+    """Slot-batched absorbed-matrix MLA decode over paged latent caches."""
+    m: MLAConfig = cfg.mla
+    N = x.shape[0]
+    H, dn, dr, dv, r = (cfg.num_heads, m.qk_nope_head_dim, m.qk_rope_head_dim,
+                        m.v_head_dim, m.kv_lora_rank)
+    posv = pos[:, None]
+    qn, qr = _mla_q(p, x, cfg, posv)                 # (N,1,H,dn), (N,1,H,dr)
+    ckv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)     # (N,1,r)
+    kr = rope((x @ p["wkr"])[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
+    ps = cache["ckv"].shape[1]
+    rows = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    newc = _paged_scatter(cache["ckv"], rows, pos, active, ckv[:, 0])
+    newr = _paged_scatter(cache["kr"], rows, pos, active, kr[:, 0])
+    cview = newc[page_table].reshape(N, -1, r)           # (N, W, r)
+    rview = newr[page_table].reshape(N, -1, kr.shape[-1])
+    W = cview.shape[1]
+    wuk = p["wuk"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", qn[:, 0], wuk,
+                       preferred_element_type=jnp.float32)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, cview.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", qr[:, 0].astype(jnp.float32),
+                      rview.astype(jnp.float32)))
+    s = s / math.sqrt(dn + dr)
+    kpos = jnp.arange(W)
+    s = jnp.where(kpos[None, None] <= pos[:, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", w, cview.astype(jnp.float32))
+    wuv = p["wuv"].reshape(r, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", lat, wuv.astype(jnp.float32))
+    o = o.reshape(N, 1, H * dv).astype(x.dtype)
+    return o @ p["wo"], {"ckv": newc, "kr": newr}
+
+
+# ---------------------------------------------------------------------------
 # Cross-attention (encoder-decoder)
 # ---------------------------------------------------------------------------
 

@@ -123,15 +123,37 @@ def param_shapes(cfg: ModelConfig):
 
 def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
                  positions=None, pos=None, cache=None, enc=None,
-                 causal=True):
-    """Returns (x, aux, new_cache)."""
+                 causal=True, page_table=None, active=None,
+                 valid_len=None):
+    """Returns (x, aux, new_cache).
+
+    Modes: 'train' | 'prefill' | 'decode' (dense per-slot caches), plus
+    the serving engine's paged-cache pair 'serve_prefill' (single slot,
+    ``page_table`` is that slot's page row, ``valid_len`` the unpadded
+    prompt length) and 'serve_decode' (slot-batched, ``page_table`` is
+    the full (N, Pmax) block table, ``active`` the slot liveness mask).
+    """
     mixer, ffn = kinds
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
     h = L.rms_norm(x, up["ln1"], cfg.norm_eps)
+    if mixer in ("ssd", "rglru", "xdec") and mode.startswith("serve_"):
+        raise NotImplementedError(
+            f"mixer {mixer!r} has no paged serve path (kvcache.supports)")
     if mixer in ("attn", "local", "xdec"):
         kind = "local" if mixer == "local" else "attn"
-        if mode == "train":
+        if mode == "serve_prefill":
+            o, new_self = L.attention_prefill_paged(
+                up["mixer"], h, cfg, kind=kind, positions=positions,
+                cache=cache["self"], page_row=page_table,
+                valid_len=valid_len)
+            new_cache = dict(cache); new_cache["self"] = new_self
+        elif mode == "serve_decode":
+            o, new_self = L.attention_decode_paged(
+                up["mixer"], h, cfg, kind=kind, pos=pos,
+                cache=cache["self"], page_table=page_table, active=active)
+            new_cache = dict(cache); new_cache["self"] = new_self
+        elif mode == "train":
             if causal:
                 o = L.attention_fwd(up["mixer"], h, cfg, kind=kind,
                                     positions=positions)
@@ -157,7 +179,18 @@ def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
                                              pos=pos, cache=cache["self"])
             new_cache = dict(cache); new_cache["self"] = new_self
     elif mixer == "mla":
-        if mode == "train":
+        if mode == "serve_prefill":
+            o, new_self = L.mla_prefill_paged(
+                up["mixer"], h, cfg, positions=positions,
+                cache=cache["self"], page_row=page_table,
+                valid_len=valid_len)
+            new_cache = dict(cache); new_cache["self"] = new_self
+        elif mode == "serve_decode":
+            o, new_self = L.mla_decode_paged(
+                up["mixer"], h, cfg, pos=pos, cache=cache["self"],
+                page_table=page_table, active=active)
+            new_cache = dict(cache); new_cache["self"] = new_self
+        elif mode == "train":
             o = L.mla_fwd(up["mixer"], h, cfg, positions=positions)
         elif mode == "prefill":
             o, new_self = L.mla_prefill(up["mixer"], h, cfg,
@@ -247,7 +280,8 @@ run_group_train = _run_group_train
 
 
 def _run_group_cached(x, gparams, gcache, unit, cfg, *, mode, positions=None,
-                      pos=None, enc=None):
+                      pos=None, enc=None, page_table=None, active=None,
+                      valid_len=None):
     def body(carry, xs):
         up, cu = xs
         xx = carry
@@ -255,7 +289,9 @@ def _run_group_cached(x, gparams, gcache, unit, cfg, *, mode, positions=None,
         for u in range(len(unit)):
             xx, _, nc = _apply_layer(xx, up[u], unit[u], cfg, mode=mode,
                                      positions=positions, pos=pos,
-                                     cache=cu[u], enc=enc)
+                                     cache=cu[u], enc=enc,
+                                     page_table=page_table, active=active,
+                                     valid_len=valid_len)
             new_cu.append(nc)
         return xx, new_cu
 
@@ -452,3 +488,63 @@ def decode_step(params: Params, cache: Params, tokens: Array,
 
 def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, enc_len))
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged-cache prefill / slot-batched decode (repro.serve)
+# ---------------------------------------------------------------------------
+
+def serve_prefill(params: Params, tokens: Array, cfg: ModelConfig,
+                  cache_groups, *, page_row: Array, prompt_len: Array
+                  ) -> Tuple[Array, Any]:
+    """Prefill ONE slot of a paged cache from a right-padded prompt.
+
+    tokens: (1, bucket) with the real prompt in the first ``prompt_len``
+    positions (a traced scalar — one executable serves every prompt up to
+    the bucket length).  ``page_row``: the slot's (Pmax,) physical page
+    list.  Returns (logits (1, V) at position prompt_len - 1, new cache
+    groups).  Pad positions are computed but masked everywhere it
+    matters: causal attention keeps them out of real positions' context,
+    and their K/V is routed to the trash page.
+    """
+    x = L.embed(params["embed"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    new_groups = []
+    for (unit, count), gp, gc in zip(layer_groups(cfg), params["groups"],
+                                     cache_groups):
+        x, nc = _run_group_cached(x, gp, gc, unit, cfg, mode="serve_prefill",
+                                  positions=positions, page_table=page_row,
+                                  valid_len=prompt_len)
+        new_groups.append(nc)
+    x_last = jnp.take(x, prompt_len - 1, axis=1)[:, None]        # (1, 1, D)
+    x_last = L.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x_last, cfg)
+    return logits[:, 0], new_groups
+
+
+def serve_decode(params: Params, cache_groups, tokens: Array,
+                 cfg: ModelConfig, *, pos: Array, page_table: Array,
+                 active: Array) -> Tuple[Array, Any]:
+    """One slot-batched decode step over a paged cache.
+
+    tokens: (N, 1) last emitted token per slot; pos: (N,) absolute write
+    position per slot; page_table: (N, Pmax); active: (N,) bool.  Every
+    slot computes (the batch shape is static — that is what keeps the one
+    persistent executable valid as requests come and go); inactive slots
+    write only to the trash page and their logits are discarded by the
+    engine.  Returns (logits (N, V), new cache groups).
+    """
+    x = L.embed(params["embed"], tokens, cfg)
+    x = shard(x, "batch", None, "embed")
+    new_groups = []
+    for (unit, count), gp, gc in zip(layer_groups(cfg), params["groups"],
+                                     cache_groups):
+        x, nc = _run_group_cached(x, gp, gc, unit, cfg, mode="serve_decode",
+                                  pos=pos, page_table=page_table,
+                                  active=active)
+        new_groups.append(nc)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0], new_groups

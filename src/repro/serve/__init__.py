@@ -1,0 +1,22 @@
+"""repro.serve: continuous-batching inference engine (paged KV cache).
+
+Sibling subsystem to :mod:`repro.engine` (training sessions): a
+:class:`ServeEngine` owns params + a fixed-capacity paged KV cache and
+runs one persistent jitted decode step over a slot-based batch —
+requests join via prefill-into-free-slots and leave on EOS / max-new
+without retracing.  See ``docs/serving.md``.
+"""
+from repro.serve.engine import ServeEngine, default_buckets
+from repro.serve.kvcache import (TRASH_PAGE, BlockAllocator, PageGeometry,
+                                 cache_bytes, default_geometry,
+                                 init_paged_cache, paged_cache_shapes,
+                                 supports)
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = [
+    "ServeEngine", "default_buckets",
+    "TRASH_PAGE", "BlockAllocator", "PageGeometry", "cache_bytes",
+    "default_geometry", "init_paged_cache", "paged_cache_shapes",
+    "supports",
+    "Request", "Scheduler",
+]

@@ -1,0 +1,437 @@
+"""ServeEngine: continuous batching over ONE persistent jitted decode step.
+
+The serving analogue of SPB's "do exactly as much work as the moment
+requires": keep every device step full by admitting and retiring
+requests mid-flight instead of padding a static batch to its slowest
+member.  The engine owns params + a fixed-capacity paged KV cache
+(:mod:`repro.serve.kvcache`) and runs a slot-based batch:
+
+* **one decode executable, ever** — the batch dimension is the fixed
+  ``num_slots``, so requests joining and leaving never retrace; per-slot
+  position, sampling params and an active-mask live in device state.
+* **prefill-into-free-slots** — prompts are right-padded to a small set
+  of bucket lengths (one executable per bucket); a traced ``prompt_len``
+  masks pad K/V to the trash page, so any prompt up to the bucket length
+  reuses the bucket's executable.
+* **no per-token host sync** — the token pick and the RNG split are
+  folded into the decode step (key carried in device state); finished
+  slots self-deactivate on device (EOS / max-new) and the host only
+  syncs at :meth:`poll` points.
+* **AOT table** — the decode + per-bucket prefill executables serialize
+  through :mod:`repro.engine.aot` (cache key gains ``mode=serve`` + the
+  slot/page geometry), so a fresh serving process imports them without
+  re-tracing.
+
+Determinism: greedy slots (temperature 0) consume no randomness, so
+their outputs are byte-identical whether a request runs solo or shares
+the batch — co-residents only ever contribute exactly-zero attention
+mass (see kvcache docstring).  Sampled slots draw from a key folded per
+step, so their streams depend on global step placement; only greedy
+outputs are placement-invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.dist import sharding as shd
+from repro.engine import aot
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.serve import kvcache
+from repro.serve.kvcache import TRASH_PAGE, PageGeometry
+from repro.serve.scheduler import Request, Scheduler
+
+State = Dict[str, Any]
+
+
+def default_buckets(geom: PageGeometry) -> Tuple[int, ...]:
+    """Prefill bucket lengths: powers of four up to the slot context."""
+    bs = tuple(b for b in (16, 64, 256, 1024) if b <= geom.max_context)
+    return bs or (geom.max_context,)
+
+
+def _make_decode_fn(cfg: ModelConfig, *, eos_id: int, num_slots: int,
+                    out_cap: int) -> Callable[[Any, State], State]:
+    V = cfg.vocab_size
+
+    def step(params, state: State) -> State:
+        logits, groups = lm.serve_decode(
+            params, state["groups"], state["tokens"], cfg,
+            pos=state["pos"], page_table=state["page_table"],
+            active=state["active"])
+        logits = logits[..., :V]
+        rng, sub = jax.random.split(state["rng"])
+        temp = state["temp"]
+
+        def _sampled(lg):
+            keys = jax.random.split(sub, num_slots)
+            s = jax.vmap(jax.random.categorical)(
+                keys, lg / jnp.maximum(temp, 1e-6)[:, None])
+            return jnp.where(temp > 0, s, jnp.argmax(lg, axis=-1))
+
+        # all-greedy batches skip RNG generation entirely (the split above
+        # still advances the stream, so sampled slots joining later don't
+        # depend on how many greedy-only steps preceded them)
+        tok = jax.lax.cond(jnp.any(temp > 0), _sampled,
+                           lambda lg: jnp.argmax(lg, axis=-1), logits)
+        active = state["active"]
+        tok = jnp.where(active, tok.astype(jnp.int32), 0)
+        # finished slots write past the buffer edge -> dropped, no branch
+        idx = jnp.where(active, state["out_len"], out_cap)
+        out = state["out"].at[jnp.arange(num_slots), idx].set(tok,
+                                                              mode="drop")
+        out_len = state["out_len"] + active.astype(jnp.int32)
+        alive = active & (tok != eos_id) & (out_len < state["max_new"])
+        return {**state, "groups": groups, "tokens": tok[:, None],
+                "pos": state["pos"] + active.astype(jnp.int32),
+                "active": alive, "out": out, "out_len": out_len, "rng": rng}
+
+    return step
+
+
+def _make_decode_chunk_fn(cfg: ModelConfig, *, eos_id: int, num_slots: int,
+                          out_cap: int, chunk: int
+                          ) -> Callable[[Any, State], State]:
+    """``chunk`` decode steps in ONE dispatch (multi-step scheduling):
+    per-call dispatch overhead amortizes over the chunk, at the price of
+    admission/retirement granularity — slots freed mid-chunk idle (as
+    masked no-ops) until the next chunk boundary."""
+    body = _make_decode_fn(cfg, eos_id=eos_id, num_slots=num_slots,
+                           out_cap=out_cap)
+    if chunk == 1:
+        return body
+
+    def stepn(params, state: State) -> State:
+        return jax.lax.scan(lambda s, _: (body(params, s), None),
+                            state, None, length=chunk)[0]
+
+    return stepn
+
+
+def _make_admit_fn(cfg: ModelConfig, *, eos_id: int, bucket: int,
+                   pages_per_slot: int) -> Callable[..., State]:
+    V = cfg.vocab_size
+
+    def admit(params, state: State, desc) -> State:
+        """Prefill one request into a slot; every other slot's state is
+        untouched.  ``desc`` is a single packed int32 vector — ONE host
+        transfer per admission instead of six (the transfers, not the
+        prefill math, dominated per-admit cost):
+
+            [prompt(bucket) | pages(Pmax) | prompt_len | slot | max_new
+             | temp_bits(f32 bitcast)]
+        """
+        prompt = desc[None, :bucket]
+        page_row = desc[bucket:bucket + pages_per_slot]
+        prompt_len = desc[bucket + pages_per_slot]
+        slot = desc[bucket + pages_per_slot + 1]
+        max_new = desc[bucket + pages_per_slot + 2]
+        temp = jax.lax.bitcast_convert_type(
+            desc[bucket + pages_per_slot + 3], jnp.float32)
+        page_table = state["page_table"].at[slot].set(page_row)
+        logits, groups = lm.serve_prefill(
+            params, prompt, cfg, state["groups"], page_row=page_row,
+            prompt_len=prompt_len)
+        logits = logits[0, :V]
+        rng, sub = jax.random.split(state["rng"])
+        tok = jax.lax.cond(
+            temp > 0,
+            lambda k: jax.random.categorical(
+                k, logits / jnp.maximum(temp, 1e-6)),
+            lambda k: jnp.argmax(logits),
+            sub).astype(jnp.int32)
+        alive = (tok != eos_id) & (max_new > 1)
+        return {**state, "groups": groups, "page_table": page_table,
+                "tokens": state["tokens"].at[slot, 0].set(tok),
+                "pos": state["pos"].at[slot].set(prompt_len),
+                "active": state["active"].at[slot].set(alive),
+                "max_new": state["max_new"].at[slot].set(max_new),
+                "temp": state["temp"].at[slot].set(temp),
+                "out": state["out"].at[slot].set(0).at[slot, 0].set(tok),
+                "out_len": state["out_len"].at[slot].set(1),
+                "rng": rng}
+
+    return admit
+
+
+class ServeEngine:
+    """A serving session: params + paged cache + scheduler + step table.
+
+    >>> from repro.configs import reduced_config
+    >>> from repro.serve import ServeEngine, default_geometry
+    >>> eng = ServeEngine(reduced_config("yi-6b"),
+    ...                   geom=default_geometry(num_slots=2, page_size=8,
+    ...                                         max_context=48))
+    >>> req = eng.submit([3, 1, 4, 1, 5], max_new=4)
+    >>> done = eng.drain()
+    >>> [len(r.output) for r in done]
+    [4]
+    """
+
+    def __init__(self, cfg: ModelConfig, *, geom: Optional[PageGeometry]
+                 = None, mesh=None, params=None, seed: int = 0,
+                 eos_id: int = -1, max_new_cap: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 watermark: float = 1.0, chunk: int = 1):
+        reason = kvcache.supports(cfg)
+        if reason:
+            raise NotImplementedError(f"serve: {cfg.name}: {reason}")
+        self.cfg = cfg
+        self.geom = geom or kvcache.default_geometry()
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.eos_id = eos_id
+        self.max_new_cap = max_new_cap or self.geom.max_context
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            default_buckets(self.geom)
+        if self.buckets[-1] > self.geom.max_context:
+            raise ValueError(f"bucket {self.buckets[-1]} exceeds slot "
+                             f"context {self.geom.max_context}")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.chunk = chunk
+        self.scheduler = Scheduler(self.geom, watermark=watermark)
+
+        N, Pmax = self.geom.num_slots, self.geom.pages_per_slot
+        with jax.sharding.set_mesh(self.mesh):
+            if params is None:
+                params = lm.init_lm(jax.random.key(seed), cfg)
+            self.params = params
+            self.state: State = {
+                "groups": kvcache.init_paged_cache(cfg, self.geom),
+                "page_table": jnp.full((N, Pmax), TRASH_PAGE, jnp.int32),
+                "pos": jnp.zeros((N,), jnp.int32),
+                "active": jnp.zeros((N,), bool),
+                "tokens": jnp.zeros((N, 1), jnp.int32),
+                "max_new": jnp.zeros((N,), jnp.int32),
+                "temp": jnp.zeros((N,), jnp.float32),
+                "out": jnp.zeros((N, self.max_new_cap), jnp.int32),
+                "out_len": jnp.zeros((N,), jnp.int32),
+                "rng": jax.random.PRNGKey(seed + 1),
+            }
+
+        shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.state)
+        self.state_shapes = shapes
+        self.state_specs = shd.serve_state_pspec(shapes, mesh=self.mesh)
+        self.state_shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.params_shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            shd.params_pspec(jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+                mesh=self.mesh),
+            is_leaf=lambda x: isinstance(x, P))
+        self._repl = NamedSharding(self.mesh, P())
+
+        self._raw: Dict[str, Callable] = {
+            "decode": _make_decode_chunk_fn(cfg, eos_id=eos_id, num_slots=N,
+                                            out_cap=self.max_new_cap,
+                                            chunk=chunk)}
+        for b in self.buckets:
+            self._raw[f"prefill_{b}"] = _make_admit_fn(
+                cfg, eos_id=eos_id, bucket=b, pages_per_slot=Pmax)
+        self._steps: Dict[str, Callable] = {}     # jitted or AOT-loaded
+        self._compiled: Dict[str, Any] = {}       # AOT Compiled objects
+        self._frozen = False                      # True after AOT import
+
+        # host-side bookkeeping
+        self._live: Dict[int, Request] = {}       # slot -> in-flight req
+        self._slot_uses = [0] * N
+        self.clock = 0                            # engine steps (incl. idle)
+        self.decode_steps = 0
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int, *,
+               temperature: float = 0.0) -> Request:
+        """Queue a request; it joins the batch at the next free slot."""
+        if not 1 <= max_new <= self.max_new_cap:
+            raise ValueError(f"max_new must be in [1, {self.max_new_cap}]")
+        if len(prompt) > self.buckets[-1]:
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds the "
+                             f"largest prefill bucket {self.buckets[-1]}")
+        req = Request(prompt=list(prompt), max_new=max_new,
+                      temperature=temperature)
+        self.scheduler.submit(req, step=self.clock)
+        return req
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"no bucket holds a {n}-token prompt")
+
+    def _admit_ready(self) -> int:
+        free = sorted(set(range(self.geom.num_slots)) - set(self._live))
+        placed = self.scheduler.admit(free, step=self.clock)
+        for req, slot, pages in placed:
+            bucket = self._bucket_for(len(req.prompt))
+            Pmax = self.geom.pages_per_slot
+            desc = np.zeros((bucket + Pmax + 4,), np.int32)
+            desc[:len(req.prompt)] = req.prompt
+            desc[bucket:bucket + len(pages)] = pages
+            desc[bucket + Pmax:] = [
+                len(req.prompt), slot, req.max_new,
+                np.float32(req.temperature).view(np.int32)]
+            fn = self.step_fn(f"prefill_{bucket}")
+            with jax.sharding.set_mesh(self.mesh):
+                self.state = fn(self.params, self.state, jnp.asarray(desc))
+            self._live[slot] = req
+            self._slot_uses[slot] += 1
+        return len(placed)
+
+    def step(self, n: int = 1) -> None:
+        """Advance the session ``n`` engine steps: admit whatever fits,
+        then run the persistent decode step (skipped while the batch is
+        empty).  One engine step is ``chunk`` decode steps in a single
+        dispatch.  No host sync happens here."""
+        for _ in range(n):
+            self._admit_ready()
+            if self._live:
+                fn = self.step_fn("decode")
+                with jax.sharding.set_mesh(self.mesh):
+                    self.state = fn(self.params, self.state)
+                self.decode_steps += self.chunk
+            self.clock += 1
+
+    def poll(self) -> List[Request]:
+        """Sync point: harvest finished requests (their slots free up and
+        their pages return to the pool).  This is the ONLY place the host
+        reads device state."""
+        if not self._live:
+            return []
+        active = np.asarray(self.state["active"])
+        fin = [r for r in self._live.values() if not active[r.slot]]
+        if not fin:
+            return []
+        out = np.asarray(self.state["out"])
+        out_len = np.asarray(self.state["out_len"])
+        done = []
+        for req in fin:
+            req.output = out[req.slot, :out_len[req.slot]].tolist()
+            self.scheduler.retire(req, step=self.clock)
+            del self._live[req.slot]
+            done.append(req)
+        return done
+
+    def drain(self, *, poll_every: int = 4,
+              max_steps: int = 100_000) -> List[Request]:
+        """Run until queue + batch are empty; returns finished requests in
+        completion order."""
+        done: List[Request] = []
+        steps = 0
+        while self._live or self.scheduler.queue:
+            self.step(1)
+            steps += 1
+            if steps % poll_every == 0 or self.scheduler.queue:
+                done.extend(self.poll())
+            if steps > max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps "
+                                   f"({len(self._live)} live, "
+                                   f"{len(self.scheduler.queue)} queued)")
+        done.extend(self.poll())
+        return done
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        alc = self.scheduler.allocator
+        return {"clock": self.clock, "decode_steps": self.decode_steps,
+                "admitted": self.scheduler.admitted,
+                "live": len(self._live),
+                "queued": len(self.scheduler.queue),
+                "slots_reused": sum(1 for u in self._slot_uses if u > 1),
+                "slot_uses": list(self._slot_uses),
+                "free_pages": alc.free_pages,
+                "page_allocs": alc.allocs, "page_frees": alc.frees}
+
+    def page_table(self) -> np.ndarray:
+        """Host copy of the (num_slots, pages_per_slot) block table."""
+        return np.asarray(self.state["page_table"])
+
+    # -- step table / AOT --------------------------------------------------
+
+    def _jit(self, key: str):
+        fn = self._raw[key]
+        if key == "decode":
+            return jax.jit(fn, in_shardings=(self.params_shardings,
+                                             self.state_shardings),
+                           out_shardings=self.state_shardings,
+                           donate_argnums=(1,))
+        return jax.jit(fn, in_shardings=(self.params_shardings,
+                                         self.state_shardings, self._repl),
+                       out_shardings=self.state_shardings,
+                       donate_argnums=(1,))
+
+    def step_fn(self, key: str) -> Callable:
+        if key not in self._steps:
+            if self._frozen:
+                raise KeyError(f"AOT serve table has no entry {key!r}; "
+                               f"available: {sorted(self._steps)}")
+            with jax.sharding.set_mesh(self.mesh):
+                self._steps[key] = self._jit(key)
+        return self._steps[key]
+
+    def _arg_specs(self, key: str):
+        params_shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params)
+        if key == "decode":
+            return (params_shapes, self.state_shapes)
+        bucket = int(key.split("_")[1])
+        n = bucket + self.geom.pages_per_slot + 4
+        return (params_shapes, self.state_shapes,
+                jax.ShapeDtypeStruct((n,), jnp.int32))
+
+    def compile_table(self) -> Dict[str, Any]:
+        """AOT lower+compile decode + every prefill bucket; compiled
+        entries replace the lazy jit wrappers."""
+        for key in self._raw:
+            if key in self._compiled:
+                continue
+            with jax.sharding.set_mesh(self.mesh):
+                compiled = self._jit(key).lower(*self._arg_specs(key)
+                                                ).compile()
+            self._compiled[key] = compiled
+            self._steps[key] = compiled
+        return dict(self._compiled)
+
+    def aot_cache_path(self, cache_root=None) -> Path:
+        root = Path(cache_root) if cache_root else aot.DEFAULT_CACHE
+        extra = {"mode": "serve", "geom": dataclasses.asdict(self.geom),
+                 "buckets": list(self.buckets), "eos_id": self.eos_id,
+                 "out_cap": self.max_new_cap, "chunk": self.chunk}
+        return root / aot.cache_key(self.cfg, None, None, self.mesh,
+                                    self.state_shapes, zero1=False,
+                                    donate=True, extra=extra)
+
+    def export_aot(self, path) -> Path:
+        if not self._compiled:
+            self.compile_table()
+        return aot.export_table(
+            self._compiled, Path(path),
+            meta={"arch": self.cfg.name, "mode": "serve",
+                  "mesh_shape": list(self.mesh.devices.shape),
+                  "mesh_axes": list(self.mesh.axis_names)})
+
+    def load_aot(self, path) -> bool:
+        """Import a serialized serve step table (no tracing/compiling);
+        False on cache miss or damaged artifacts, AOTCompatError on a
+        genuine topology mismatch."""
+        if not aot.table_exists(path):
+            return False
+        try:
+            table = aot.import_table(path, expect_mesh=self.mesh)
+        except (aot.AOTCorruptError, FileNotFoundError):
+            return False
+        self._steps.update({str(k): v for k, v in table.items()})
+        self._frozen = True
+        return True

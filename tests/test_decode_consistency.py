@@ -48,17 +48,23 @@ def test_prefill_decode_matches_forward(arch):
         np.asarray(logits_train[:, -1], np.float32), rtol=2e-4, atol=2e-4)
 
 
-def test_multi_step_decode_matches_forward():
+# dense GQA, local+global, encoder-decoder and pure-SSM caches all have
+# to survive a multi-token decode, not just the single step above
+@pytest.mark.parametrize("arch", ["gemma3-4b", "yi-6b",
+                                  "seamless-m4t-medium", "mamba2-2.7b"])
+def test_multi_step_decode_matches_forward(arch):
     """Greedy multi-token decode equals teacher-forced forward logits."""
-    cfg = reduced_config("gemma3-4b")
+    cfg = reduced_config(arch)
     B, S, gen = 1, 48, 8
     params = lm.init_lm(jax.random.key(1), cfg)
     batch = make_batch(cfg, B, S)
     toks = batch["tokens"]
     logits_train, _ = lm.forward_train(params, batch, cfg)
 
-    cache = lm.init_cache(cfg, B, S)
-    pre = {"tokens": toks[:, :S - gen]}
+    cache = lm.init_cache(cfg, B, S, enc_len=S if cfg.enc_layers else 0)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :S - gen]
+    pre.pop("labels", None)
     _, cache = lm.prefill(params, pre, cfg, cache)
     for i in range(gen):
         pos = S - gen + i

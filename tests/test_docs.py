@@ -18,7 +18,7 @@ DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
 # docs that must carry at least one executable snippet (migration.md and
 # README are tables/commands only)
 _MUST_HAVE_SNIPPETS = {"architecture.md", "pipeline-schedules.md",
-                       "sharding.md", "cluster.md"}
+                       "sharding.md", "cluster.md", "serving.md"}
 
 
 @pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
@@ -37,6 +37,7 @@ def test_doc_snippets_execute(path):
     "repro.dist.pipeline.runtime",
     "repro.engine.engine",
     "repro.engine.policies",
+    "repro.serve.engine",
 ])
 def test_public_surface_docstring_examples(module_name):
     """The docstring pass on the public engine surface: SPBEngine, the
@@ -67,7 +68,7 @@ def test_docs_have_no_dead_links():
 def test_docs_tree_is_complete():
     """The documented tree exists and README links every page."""
     expected = {"architecture.md", "pipeline-schedules.md", "sharding.md",
-                "cluster.md", "migration.md"}
+                "cluster.md", "migration.md", "serving.md"}
     have = {p.name for p in (ROOT / "docs").glob("*.md")}
     assert expected <= have, expected - have
     readme = (ROOT / "README.md").read_text(encoding="utf-8")

@@ -1,0 +1,255 @@
+"""Serving subsystem contract: continuous batching must be invisible.
+
+The load-bearing property is the first test: a greedy request's output
+is byte-identical whether it runs alone or joins a batch mid-flight —
+slot isolation (disjoint pages + trash-page masking) means co-residents
+contribute exactly-zero attention mass, not just epsilon.  The rest pins
+the machinery that property rests on: paged decode == dense decode,
+pages return to the free list, FCFS + watermark admission, the chunked
+decode step, and the AOT round trip.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import lm
+from repro.serve import (BlockAllocator, PageGeometry, Request, Scheduler,
+                         ServeEngine, TRASH_PAGE, default_geometry)
+
+PROMPT_A = [3, 1, 4, 1, 5, 9, 2, 6]
+PROMPT_B = [2, 7, 1, 8, 2, 8]
+
+
+def _geom(slots=2):
+    return default_geometry(num_slots=slots, page_size=8, max_context=48)
+
+
+@pytest.fixture(scope="module")
+def yi():
+    cfg = reduced_config("yi-6b")
+    params = lm.init_lm(jax.random.key(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# scheduler / allocator units (host-side, no compilation)
+# ---------------------------------------------------------------------------
+
+def test_allocator_invariants():
+    geom = PageGeometry(num_slots=2, page_size=8, pages_per_slot=4,
+                        num_pages=9)
+    alc = BlockAllocator(geom)
+    assert alc.free_pages == 8
+    a = alc.alloc(3)
+    assert a == [1, 2, 3]                   # lowest-id-first, never page 0
+    assert TRASH_PAGE not in a
+    assert alc.alloc(6) is None             # pool can't satisfy -> None
+    alc.free(a)
+    assert alc.free_pages == 8
+    assert alc.alloc(3) == [1, 2, 3]        # freed pages recycle low-first
+    with pytest.raises(ValueError, match="double free"):
+        alc.free([4, 4])
+    with pytest.raises(ValueError, match="trash"):
+        alc.free([TRASH_PAGE])
+
+
+def test_geometry_validation():
+    with pytest.raises(ValueError):
+        PageGeometry(num_slots=0, page_size=8, pages_per_slot=4, num_pages=9)
+    with pytest.raises(ValueError):
+        PageGeometry(num_slots=1, page_size=8, pages_per_slot=1, num_pages=1)
+    geom = _geom()
+    assert geom.max_context == 48
+    assert geom.capacity_tokens == (geom.num_pages - 1) * geom.page_size
+
+
+def test_scheduler_fcfs_no_bypass():
+    """If the queue head doesn't fit, nothing behind it jumps ahead."""
+    geom = PageGeometry(num_slots=2, page_size=8, pages_per_slot=4,
+                        num_pages=5)                    # pool: 4 pages
+    sch = Scheduler(geom)
+    big = Request(prompt=[1] * 8, max_new=24)           # 4 pages
+    small = Request(prompt=[1] * 4, max_new=4)          # 1 page
+    tiny = Request(prompt=[1] * 2, max_new=2)           # 1 page
+    sch.submit(big)
+    sch.submit(small)
+    placed = sch.admit([0, 1])
+    assert [r.rid for r, _, _ in placed] == [big.rid]   # big takes the pool
+    sch.submit(tiny)
+    assert sch.admit([1]) == []                         # small blocks tiny
+    sch.retire(big)
+    placed = sch.admit([0, 1])
+    assert [r.rid for r, _, _ in placed] == [small.rid, tiny.rid]
+    assert sch.allocator.allocs == sch.allocator.frees + 2
+
+
+def test_scheduler_watermark_budget():
+    geom = PageGeometry(num_slots=4, page_size=8, pages_per_slot=4,
+                        num_pages=17)                   # capacity 128 tokens
+    sch = Scheduler(geom, watermark=0.5)                # budget 64 tokens
+    reqs = [Request(prompt=[1] * 8, max_new=24) for _ in range(3)]  # 32 each
+    for r in reqs:
+        sch.submit(r)
+    placed = sch.admit([0, 1, 2, 3])
+    assert len(placed) == 2                             # third exceeds budget
+    assert sch.committed_tokens == 64
+    sch.retire(placed[0][0])
+    assert len(sch.admit([0])) == 1                     # budget freed -> admits
+
+
+def test_scheduler_rejects_oversized():
+    sch = Scheduler(_geom())
+    with pytest.raises(ValueError, match="exceeds slot capacity"):
+        sch.submit(Request(prompt=[1] * 40, max_new=48))
+
+
+# ---------------------------------------------------------------------------
+# engine: the continuous-batching contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["yi-6b", "gemma3-4b",
+                                  "deepseek-v2-lite-16b"])
+def test_staggered_matches_solo(arch):
+    """THE acceptance property: request B joining while A is mid-decode
+    changes neither output by a single token (greedy).  Covers dense GQA,
+    local+global windows and MLA absorbed decode."""
+    cfg = reduced_config(arch)
+    params = lm.init_lm(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, geom=_geom(), params=params)
+
+    solo = {}
+    for prompt in (PROMPT_A, PROMPT_B):
+        req = eng.submit(prompt, max_new=6)
+        (done,) = eng.drain()
+        solo[tuple(prompt)] = done.output
+
+    ra = eng.submit(PROMPT_A, max_new=6)
+    eng.step(2)                             # A mid-decode ...
+    rb = eng.submit(PROMPT_B, max_new=6)    # ... when B joins
+    done = eng.drain()
+    assert {r.rid for r in done} == {ra.rid, rb.rid}
+    assert ra.output == solo[tuple(PROMPT_A)]
+    assert rb.output == solo[tuple(PROMPT_B)]
+    assert len(ra.output) == len(rb.output) == 6
+
+
+def test_paged_decode_matches_dense(yi):
+    """ServeEngine's paged greedy continuation == the dense
+    prefill/decode_step path on the same params."""
+    cfg, params = yi
+    max_new = 8
+    eng = ServeEngine(cfg, geom=_geom(), params=params)
+    req = eng.submit(PROMPT_A, max_new=max_new)
+    eng.drain()
+
+    V = cfg.vocab_size
+    cache = lm.init_cache(cfg, 1, len(PROMPT_A) + max_new)
+    logits, cache = lm.prefill(
+        params, {"tokens": np.asarray([PROMPT_A], np.int32)}, cfg, cache)
+    ref = [int(np.argmax(np.asarray(logits[0, 0, :V])))]
+    for _ in range(max_new - 1):
+        tok = np.asarray([[ref[-1]]], np.int32)
+        logits, cache = lm.decode_step(params, cache, tok, cfg)
+        ref.append(int(np.argmax(np.asarray(logits[0, 0, :V]))))
+    assert req.output == ref
+
+
+def test_slot_reuse_and_freelist(yi):
+    """More requests than slots: slots recycle, every page comes home."""
+    cfg, params = yi
+    eng = ServeEngine(cfg, geom=_geom(slots=2), params=params)
+    reqs = [eng.submit(PROMPT_A, max_new=3 + i) for i in range(5)]
+    done = eng.drain()
+    assert len(done) == 5
+    assert [len(r.output) for r in reqs] == [3, 4, 5, 6, 7]
+    st = eng.stats()
+    assert st["slots_reused"] == 2          # both slots served >1 request
+    assert st["page_allocs"] == st["page_frees"] > 0
+    assert st["free_pages"] == eng.geom.num_pages - 1
+    # stale table rows are fine: inactive slots write to the trash page
+    assert not np.asarray(eng.state["active"]).any()
+
+
+def test_pool_exhaustion_queues_then_completes(yi):
+    """An oversubscribed pool queues the overflow request; it admits when
+    pages free up and still finishes correctly."""
+    cfg, params = yi
+    geom = PageGeometry(num_slots=2, page_size=8, pages_per_slot=4,
+                        num_pages=5)        # 4 usable pages, slots want 8
+    eng = ServeEngine(cfg, geom=geom, params=params)
+    r1 = eng.submit(PROMPT_A, max_new=8)    # 16 tok = 2 pages
+    r2 = eng.submit(PROMPT_B, max_new=10)   # 16 tok = 2 pages
+    r3 = eng.submit(PROMPT_A, max_new=8)    # must wait for pages
+    eng.step(1)
+    assert len(eng._live) == 2 and len(eng.scheduler.queue) == 1
+    done = eng.drain()
+    assert {r.rid for r in done} == {r1.rid, r2.rid, r3.rid}
+    assert r3.admitted_step > r2.admitted_step
+    assert r1.output == r3.output           # same prompt, same greedy path
+    assert eng.stats()["free_pages"] == 4
+
+
+def test_chunked_decode_equivalence(yi):
+    """chunk=3 (three decode steps per dispatch) produces the same tokens
+    as the single-step engine, in fewer dispatches."""
+    cfg, params = yi
+    eng1 = ServeEngine(cfg, geom=_geom(), params=params, chunk=1)
+    eng3 = ServeEngine(cfg, geom=_geom(), params=params, chunk=3)
+    outs = []
+    for eng in (eng1, eng3):
+        eng.submit(PROMPT_A, max_new=7)
+        eng.submit(PROMPT_B, max_new=5)
+        done = eng.drain()
+        outs.append(sorted((tuple(r.prompt), tuple(r.output)) for r in done))
+    assert outs[0] == outs[1]
+    assert eng3.clock < eng1.clock
+
+
+def test_submit_validation(yi):
+    cfg, params = yi
+    eng = ServeEngine(cfg, geom=_geom(), params=params)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(PROMPT_A, max_new=0)
+    with pytest.raises(ValueError, match="bucket"):
+        eng.submit(list(range(100)), max_new=2)
+
+
+def test_unsupported_arch_raises():
+    with pytest.raises(NotImplementedError, match="paged decode"):
+        ServeEngine(reduced_config("mamba2-2.7b"), geom=_geom())
+
+
+# ---------------------------------------------------------------------------
+# AOT round trip
+# ---------------------------------------------------------------------------
+
+def test_aot_round_trip(yi, tmp_path):
+    """Export the serve table, import it into a fresh engine: no tracing,
+    identical outputs, and the frozen table refuses unknown entries."""
+    cfg, params = yi
+    geom = _geom()
+    eng = ServeEngine(cfg, geom=geom, params=params)
+    path = eng.aot_cache_path(tmp_path)
+    eng.export_aot(path)
+    req = eng.submit(PROMPT_A, max_new=6)
+    eng.drain()
+
+    eng2 = ServeEngine(cfg, geom=geom, params=params)
+    assert eng2.load_aot(path)
+    assert eng2._frozen
+    req2 = eng2.submit(PROMPT_A, max_new=6)
+    eng2.drain()
+    assert req2.output == req.output
+    with pytest.raises(KeyError, match="AOT serve table"):
+        eng2.step_fn("prefill_999")
+
+
+def test_aot_cache_key_varies_with_geometry(yi, tmp_path):
+    """The cache key owns the serve geometry: a different slot/page layout
+    must map to a different table directory."""
+    cfg, params = yi
+    eng = ServeEngine(cfg, geom=_geom(), params=params)
+    other = ServeEngine(cfg, geom=_geom(slots=3), params=params)
+    assert eng.aot_cache_path(tmp_path) != other.aot_cache_path(tmp_path)
+    assert not eng.load_aot(eng.aot_cache_path(tmp_path))   # miss, no table

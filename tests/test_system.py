@@ -41,10 +41,12 @@ def test_spb_training_reduces_loss_similarly():
 
 def test_serve_generates():
     from repro.launch.serve import serve
-    seq = serve(["--arch", "gemma3-4b", "--batch", "2",
-                 "--prompt-len", "32", "--gen", "4"])
-    assert seq.shape == (2, 4)
-    assert (seq >= 0).all()
+    done = serve(["--arch", "gemma3-4b", "--requests", "3", "--slots", "2",
+                  "--prompt-len", "32", "--max-new", "4",
+                  "--arrive-every", "2"])
+    assert len(done) == 3
+    assert all(len(r.output) == 4 for r in done)
+    assert all(t >= 0 for r in done for t in r.output)
 
 
 def test_sharding_specs_resolve_without_mesh():
