@@ -29,7 +29,11 @@ real session pays it too) so steady-state estimates are not poisoned.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import os
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
@@ -41,8 +45,10 @@ from repro.cluster.runtime import (ExecutionBackend, JobSpec, Task,
                                    TaskContext, TaskFailedError, WorkerSpec)
 from repro.config import ModelConfig, SPBConfig, TrainConfig
 from repro.data.pipeline import Pipeline
-from repro.engine import CyclePolicy, SPBEngine, SchedulerHookPolicy
-from repro.launch.mesh import make_host_mesh
+from repro.engine import (CyclePolicy, FusedEngine, SPBEngine,
+                          SchedulerHookPolicy, stack_batches, stepcache)
+from repro.engine.aot import step_ident
+from repro.launch.mesh import assert_disjoint, make_host_mesh
 
 
 @dataclass
@@ -87,11 +93,34 @@ def make_live_job(job_id: int, arrival: float, cfg: ModelConfig, *,
 class LiveBackend(ExecutionBackend):
     """Executes placed tasks as real train steps on an SPBEngine pool.
 
+    **Spatial co-location** (``submeshes=``): pass a list of disjoint
+    submeshes (``launch.mesh.make_submeshes``) and machine slot ``i``
+    maps to ``submeshes[i]`` — accepted placements on different machines
+    run as genuinely concurrent train steps on separate device subsets
+    (the backend sets ``concurrent_rounds`` so the runtime overlaps
+    per-machine chains).  A job's engine follows its placements: when a
+    task lands on a machine whose submesh differs from the engine's
+    current one, the engine ``resize()``s onto it — burst-parallel
+    elastic scaling through the same reshard path checkpoint restore
+    uses.  The process-wide step cache makes the bounce cheap: returning
+    to a previously-visited submesh re-traces nothing.  Without
+    ``submeshes`` the pool time-multiplexes one shared host mesh exactly
+    as before.
+
+    **Horizontal fusion** (``fuse=True``): jobs with identical
+    (config, train, SPB, batch, workers, iterations) signatures stack
+    into one :class:`~repro.engine.FusedEngine` running a single vmapped
+    train step; only the group leader's JobSpec is scheduled (its worker
+    memory scaled by the group size), and per-member metrics/steps are
+    unstacked after every fused step.
+
     ``ema``: weight of the newest measurement when updating the
     ``WorkerSpec.duration`` estimate.  ``timer`` is injectable for
     deterministic tests.  ``aot_cache``: optional directory of serialized
     step tables (the same cache the dry-run/trainer write) — engines that
-    find a topology-matching table skip re-trace/re-compile.
+    find a topology-matching table skip re-trace/re-compile, and an
+    engine that misses compiles + exports so every later same-key job
+    (and process) shares the single artifact.
 
     Fault tolerance: each accepted task gets ``max_retries`` re-attempts
     with exponential backoff (``backoff_s`` doubling; ``sleeper`` is
@@ -110,7 +139,8 @@ class LiveBackend(ExecutionBackend):
     """
     name = "live"
 
-    def __init__(self, jobs: List[LiveJob], *, mesh=None, ema: float = 0.5,
+    def __init__(self, jobs: List[LiveJob], *, mesh=None, submeshes=None,
+                 fuse: bool = False, ema: float = 0.5,
                  aot_cache: Optional[str] = None, verbose: bool = False,
                  timer: Callable[[], float] = time.perf_counter,
                  ckpt_dir: Optional[str] = None, max_retries: int = 2,
@@ -125,7 +155,17 @@ class LiveBackend(ExecutionBackend):
         self.jobs: Dict[int, LiveJob] = {lj.spec.job_id: lj for lj in jobs}
         if len(self.jobs) != len(jobs):
             raise ValueError("duplicate job_id in LiveJob list")
-        self.mesh = mesh if mesh is not None else make_host_mesh()
+        if submeshes is not None:
+            if mesh is not None:
+                raise ValueError("pass mesh= or submeshes=, not both")
+            submeshes = list(submeshes)
+            if not submeshes:
+                raise ValueError("submeshes= must be non-empty")
+            assert_disjoint(submeshes)
+        self.submeshes = submeshes
+        self.concurrent_rounds = submeshes is not None
+        self.mesh = (submeshes[0] if submeshes is not None else
+                     mesh if mesh is not None else make_host_mesh())
         self.ema = ema
         self.aot_cache = aot_cache
         self.verbose = verbose
@@ -154,51 +194,157 @@ class LiveBackend(ExecutionBackend):
         # the measured wall-clock — the feedback loop's paper trail
         self.task_estimates: Dict[Tuple[int, int, int], float] = {}
         self.task_measured: Dict[Tuple[int, int, int], float] = {}
+        # spatial bookkeeping: per-scheduled-job locks (concurrent rounds
+        # may race two workers of one job), elastic resize counts, and
+        # the high-water mark of genuinely-overlapping tasks
+        self._job_locks: Dict[int, threading.Lock] = {}
+        self._active_lock = threading.Lock()
+        self._active = 0
+        self.max_concurrent_tasks = 0
+        self.resizes: Dict[int, int] = {}
+        self.aot_events: Dict[int, str] = {}      # jid -> loaded|exported
+        # horizontal fusion: leader jid -> ordered member jids
+        self.fused: Dict[int, List[int]] = {}
+        self._leader: Dict[int, int] = {}         # member jid -> leader
+        if fuse:
+            self._build_fusion_groups()
+
+    # -- horizontal fusion -------------------------------------------------
+
+    @staticmethod
+    def _fuse_signature(lj: LiveJob) -> str:
+        """Jobs fuse iff everything that shapes the vmapped step AND the
+        scheduling footprint matches; only the data seed may differ."""
+        ident = step_ident(lj.cfg, lj.tcfg, lj.spb, zero1=True, donate=True)
+        ident.update(batch=lj.batch, seq=lj.seq,
+                     iterations=lj.spec.iterations,
+                     workers=[(w.duration, w.memory, w.frac)
+                              for w in lj.spec.workers])
+        blob = json.dumps(ident, sort_keys=True, default=str).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def _build_fusion_groups(self) -> None:
+        groups: Dict[str, List[int]] = {}
+        for jid in self.jobs:           # insertion order = caller order
+            groups.setdefault(self._fuse_signature(self.jobs[jid]),
+                              []).append(jid)
+        for members in groups.values():
+            if len(members) < 2:
+                continue
+            leader = members[0]
+            self.fused[leader] = members
+            for m in members:
+                self._leader[m] = leader
+            # the group schedules as ONE job: the leader's workers carry
+            # the stacked state's memory footprint
+            lead = self.jobs[leader].spec
+            lead.workers = [dataclasses.replace(
+                w, memory=w.memory * len(members)) for w in lead.workers]
+
+    def _members(self, jid: int) -> List[int]:
+        """Member jobs advanced by one scheduled task of ``jid``."""
+        return self.fused.get(jid, [jid])
 
     # -- runtime hooks -----------------------------------------------------
 
     def specs(self) -> List[JobSpec]:
-        """The scheduling-facing JobSpecs (hand these to ClusterRuntime)."""
-        return [lj.spec for lj in self.jobs.values()]
+        """The scheduling-facing JobSpecs (hand these to ClusterRuntime):
+        fused groups surface only their leader."""
+        return [lj.spec for jid, lj in self.jobs.items()
+                if self._leader.get(jid, jid) == jid]
+
+    def _arrival_mesh(self, jid: int):
+        """Initial placement: spread arrivals round-robin over submeshes
+        (the first accepted task resizes the engine wherever the
+        scheduler actually put it)."""
+        if self.submeshes is None:
+            return self.mesh
+        return self.submeshes[jid % len(self.submeshes)]
 
     def job_arrived(self, job: JobSpec, now: float) -> None:
-        lj = self.jobs[job.job_id]
+        jid = job.job_id
+        lj = self.jobs[jid]
+        members = self._members(jid)
         hook = SchedulerHookPolicy(lj.cfg, lj.spb,
                                    default=CyclePolicy(lj.cfg, lj.spb))
-        engine = SPBEngine(lj.cfg, lj.tcfg, lj.spb, mesh=self.mesh,
-                           policy=hook)
-        engine.init_state(jax.random.key(lj.tcfg.seed))
+        mesh = self._arrival_mesh(jid)
+        if len(members) > 1:
+            engine = FusedEngine(lj.cfg, lj.tcfg, lj.spb, mesh=mesh,
+                                 policy=hook, num_jobs=len(members))
+            engine.init_states([self.jobs[m].tcfg.seed for m in members])
+        else:
+            engine = SPBEngine(lj.cfg, lj.tcfg, lj.spb, mesh=mesh,
+                               policy=hook)
+            engine.init_state(jax.random.key(lj.tcfg.seed))
         if self.aot_cache:
-            specs = engine.batch_specs_like(
-                self._pipe(job.job_id).get_batch(0))
-            if engine.load_aot(engine.aot_cache_path(specs, self.aot_cache)):
-                self._warmed.update(
-                    (job.job_id, k) for k in engine.depth_keys())
+            specs = engine.batch_specs_like(self._stacked_batch(jid, 0))
+            path = engine.aot_cache_path(specs, self.aot_cache)
+            fp = stepcache.mesh_fingerprint(engine.mesh)
+            if engine.load_aot(path):
+                self._warmed.update((jid, k, fp)
+                                    for k in engine.depth_keys())
+                self.aot_events[jid] = "loaded"
                 if self.verbose:
-                    print(f"[live] job={job.job_id} AOT step table loaded",
+                    print(f"[live] job={jid} AOT step table loaded",
                           flush=True)
-        self.engines[job.job_id] = engine
-        self.hooks[job.job_id] = hook
-        self.steps_run[job.job_id] = 0
-        self.observed_depths[job.job_id] = set()
+            else:
+                # compile + export on the miss so every later job (or
+                # process) with the same scrubbed key shares this one
+                # artifact instead of re-exporting per job
+                engine.compile_table(specs)
+                engine.export_aot(path)
+                self._warmed.update((jid, k, fp)
+                                    for k in engine.depth_keys())
+                self.aot_events[jid] = "exported"
+                if self.verbose:
+                    print(f"[live] job={jid} AOT step table compiled + "
+                          f"exported to {path}", flush=True)
+        self.engines[jid] = engine
+        self.hooks[jid] = hook
+        self._job_locks[jid] = threading.Lock()
+        for m in members:
+            self.steps_run[m] = 0
+            self.observed_depths[m] = set()
         if self.ckpt_dir:
             # iteration-0 snapshot: a crash before the first cadence tick
             # still has something to roll back to
             mgr = CheckpointManager(
-                os.path.join(self.ckpt_dir, f"job_{job.job_id}"), keep=3)
+                os.path.join(self.ckpt_dir, f"job_{jid}"), keep=3)
             mgr.save(engine.state, 0)
-            self.ckpt_mgrs[job.job_id] = mgr
-            self._ckpt_steps[(job.job_id, 0)] = 0
+            self.ckpt_mgrs[jid] = mgr
+            self._ckpt_steps[(jid, 0)] = 0
         if self.verbose:
-            print(f"[live] job={job.job_id} model={lj.cfg.name} "
-                  f"workers={job.num_workers} arrived t={now:.2f}s",
-                  flush=True)
+            fused = (f" fused={members}" if len(members) > 1 else "")
+            print(f"[live] job={jid} model={lj.cfg.name} "
+                  f"workers={job.num_workers} arrived t={now:.2f}s"
+                  f"{fused}", flush=True)
+
+    def _ensure_submesh(self, jid: int, machine: int) -> None:
+        """Spatial mode: the engine follows its placement — machine slot
+        ``i`` IS submesh ``i``, so a task accepted on a different machine
+        elastically resizes the job onto that submesh (reshard via
+        device_put; the shared step cache makes a return visit free)."""
+        if self.submeshes is None:
+            return
+        if machine >= len(self.submeshes):
+            raise ValueError(f"machine {machine} has no submesh (have "
+                             f"{len(self.submeshes)}); run with "
+                             f"num_machines == len(submeshes)")
+        target = self.submeshes[machine]
+        engine = self.engines[jid]
+        if engine.mesh is not target:
+            engine.resize(target)
+            self.resizes[jid] = self.resizes.get(jid, 0) + 1
+            if self.verbose:
+                print(f"[live] job={jid} resized onto submesh {machine} "
+                      f"({target.devices.size} dev)", flush=True)
 
     def run_task(self, job: JobSpec, task: Task, machine: int,
                  start: float, migrated: bool,
                  ctx: Optional[TaskContext] = None) -> float:
         jid = task.job_id
         engine, hook = self.engines[jid], self.hooks[jid]
+        members = self._members(jid)
         self.task_estimates[(jid, task.worker_id, task.iteration)] = \
             task.duration
         # the scheduler's depth decision for this worker-task, enacted —
@@ -207,13 +353,31 @@ class LiveBackend(ExecutionBackend):
         if ctx is not None and ctx.degraded_frac < frac:
             frac = ctx.degraded_frac
             self.degraded_steps[jid] = self.degraded_steps.get(jid, 0) + 1
-        hook.request_fraction(frac)
-        measured, metrics = self._attempt(job, task, ctx)
-        self.steps_run[jid] += 1
-        self.observed_depths[jid].add(engine.last_depth)
-        self.last_xent[jid] = float(metrics["xent"])
+        # concurrent rounds may run two workers of one job on different
+        # machines at once; the engine (one state) takes them in turn
+        with self._job_locks[jid]:
+            self._ensure_submesh(jid, machine)
+            hook.request_fraction(frac)
+            with self._active_lock:
+                self._active += 1
+                self.max_concurrent_tasks = max(self.max_concurrent_tasks,
+                                                self._active)
+            try:
+                measured, metrics = self._attempt(job, task, ctx)
+            finally:
+                with self._active_lock:
+                    self._active -= 1
+        if len(members) > 1:
+            per_job = engine.per_job_metrics(metrics)
+        for i, m in enumerate(members):
+            self.steps_run[m] += 1
+            self.observed_depths[m].add(engine.last_depth)
+            self.last_xent[m] = (float(per_job[i]["xent"])
+                                 if len(members) > 1
+                                 else float(metrics["xent"]))
         self.task_measured[(jid, task.worker_id, task.iteration)] = measured
-        warm_key = (jid, engine.last_depth)
+        warm_key = (jid, engine.last_depth,
+                    stepcache.mesh_fingerprint(engine.mesh))
         if warm_key in self._warmed:
             # feedback: the measurement displaces the WorkerSpec estimate,
             # so tasks spawned for later iterations carry real costs into
@@ -221,8 +385,9 @@ class LiveBackend(ExecutionBackend):
             w = job.workers[task.worker_id]
             w.duration = (1 - self.ema) * w.duration + self.ema * measured
         else:
-            self._warmed.add(warm_key)      # first run at this depth paid
-                                            # jit compile; don't poison EMA
+            self._warmed.add(warm_key)      # first run at this depth on
+                                            # this submesh may pay compile
+                                            # or reshard; don't poison EMA
         if self.verbose:
             print(f"[live] t={start:8.2f}s machine={machine} job={jid} "
                   f"worker={task.worker_id} iter={task.iteration} "
@@ -245,7 +410,7 @@ class LiveBackend(ExecutionBackend):
         spent = 0.0
         last_err: Optional[BaseException] = None
         for attempt in range(attempts):
-            batch = self._pipe(jid).get_batch(step)
+            batch = self._stacked_batch(jid, step)
             t0 = self.timer()
             try:
                 if self.fault_hook is not None:
@@ -302,6 +467,7 @@ class LiveBackend(ExecutionBackend):
                      now: float) -> None:
         jid = job.job_id
         engine = self.engines[jid]
+        members = self._members(jid)
         mgr = self.ckpt_mgrs.get(jid)
         if mgr is not None:
             mgr.wait()      # snapshot must be durable (or raise) first
@@ -311,10 +477,15 @@ class LiveBackend(ExecutionBackend):
                                       shardings=engine.state_shardings)
             engine.attach_state(state)
             assert step == to_iteration
+        elif len(members) > 1:
+            # no durable checkpoints: restart the whole fused group from
+            # its per-member initial states
+            engine.init_states([self.jobs[m].tcfg.seed for m in members])
         else:
-            # no durable checkpoints: restart from the initial state
             engine.init_state(jax.random.key(self.jobs[jid].tcfg.seed))
-        self.steps_run[jid] = self._ckpt_steps.get((jid, to_iteration), 0)
+        rewind = self._ckpt_steps.get((jid, to_iteration), 0)
+        for m in members:
+            self.steps_run[m] = rewind
         self.restores[jid] = self.restores.get(jid, 0) + 1
         if self.verbose:
             print(f"[live] job={jid} restored from checkpoint "
@@ -349,11 +520,24 @@ class LiveBackend(ExecutionBackend):
                                         seed=lj.tcfg.seed)
         return self._pipes[jid]
 
+    def _stacked_batch(self, jid: int, step: int):
+        """The batch one scheduled task of ``jid`` consumes: the job's own
+        pipeline output, or the members' batches stacked on the jobs axis
+        for a fused group (each member keeps its own seeded stream)."""
+        members = self._members(jid)
+        if len(members) == 1:
+            return self._pipe(jid).get_batch(step)
+        return stack_batches([self._pipe(m).get_batch(step)
+                              for m in members])
+
     def summary(self) -> Dict[int, dict]:
         out = {}
         for jid, lj in self.jobs.items():
+            # a fused member's task-level stats live under its leader (the
+            # only job the scheduler saw)
+            leader = self._leader.get(jid, jid)
             meas = [v for (j, _, _), v in self.task_measured.items()
-                    if j == jid]
+                    if j == leader]
             out[jid] = {
                 "model": lj.cfg.name,
                 "workers": lj.spec.num_workers,
@@ -364,9 +548,13 @@ class LiveBackend(ExecutionBackend):
                 "final_xent": self.last_xent.get(jid),
                 "mean_step_ms": (sum(meas) / len(meas) * 1e3 if meas
                                  else None),
-                "retries": self.retries.get(jid, 0),
-                "restores": self.restores.get(jid, 0),
-                "degraded_steps": self.degraded_steps.get(jid, 0),
-                "failed": self.failed.get(jid),
+                "retries": self.retries.get(leader, 0),
+                "restores": self.restores.get(leader, 0),
+                "degraded_steps": self.degraded_steps.get(leader, 0),
+                "failed": self.failed.get(leader),
+                "fused_with": (self.fused[leader]
+                               if leader in self.fused else None),
+                "resizes": self.resizes.get(leader, 0),
+                "aot": self.aot_events.get(leader),
             }
         return out

@@ -51,6 +51,7 @@ this module.
 from __future__ import annotations
 
 import heapq
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -165,8 +166,18 @@ class ExecutionBackend:
     duration (and may react to job lifecycle events).  ``run_task`` is
     called exactly once per accepted placement, after the migration
     penalty and horizon checks, in virtual-ready order per job.
+
+    A backend that sets ``concurrent_rounds = True`` (the spatial
+    LiveBackend) asks the runtime to execute each scheduling round's
+    accepted placements *concurrently across machines*: per-machine task
+    chains stay sequential (a machine runs one task at a time) but
+    different machines' chains run in parallel threads, so disjoint
+    submeshes genuinely overlap wall-clock.  Such a backend's
+    ``run_task`` must be thread-safe across jobs.  The concurrent path
+    only engages when fault injection and health monitoring are off.
     """
     name = "base"
+    concurrent_rounds = False
 
     def job_arrived(self, job: JobSpec, now: float) -> None:
         """A job entered the system (its iteration-0 tasks spawn next)."""
@@ -219,7 +230,10 @@ class SimResult:
     migrations: Dict[int, int]             # job -> total worker migrations
     total_iterations: Dict[int, int]
     machine_busy: float                    # total busy machine-seconds
-    util: float                            # busy / (makespan * machines)
+    util: float                            # busy / available capacity
+    #   capacity = makespan * machines - down_s: crashed machines are
+    #   excluded from the denominator while down, so fault-heavy runs
+    #   don't under-report how well the *surviving* pool was used
     # optional full schedule: (machine, start, end, job, worker, iteration)
     schedule: List[Tuple[int, float, float, int, int, int]] = field(
         default_factory=list)
@@ -238,6 +252,8 @@ class SimResult:
     # (job, worker, iteration) per transient-failure retry
     retried_tasks: List[Tuple[int, int, int]] = field(default_factory=list)
     degraded_steps: int = 0                # tasks run at shallower depth
+    down_s: float = 0.0                    # machine-seconds crashed-out
+    #                                        (subtracted from capacity)
 
     @property
     def task_retries(self) -> int:
@@ -247,6 +263,34 @@ class SimResult:
         it = self.total_iterations[job_id]
         w = max(1, it)
         return self.migrations[job_id] / w
+
+
+def _down_seconds(plan: FaultPlan, makespan: float,
+                  num_machines: int) -> float:
+    """Total machine-seconds inside ``[0, makespan]`` during which some
+    machine was crashed: per-machine crash intervals, clipped to the
+    session window and merged (overlapping crashes don't double-count).
+    This is what the util/goodput denominators exclude."""
+    by_machine: Dict[int, List[Tuple[float, float]]] = {}
+    for c in plan.crashes:
+        if not 0 <= c.machine < num_machines:
+            continue
+        s = min(max(c.at, 0.0), makespan)
+        e = min(max(c.repaired_at, 0.0), makespan)
+        if e > s:
+            by_machine.setdefault(c.machine, []).append((s, e))
+    total = 0.0
+    for ivs in by_machine.values():
+        ivs.sort()
+        cur_s, cur_e = ivs[0]
+        for s, e in ivs[1:]:
+            if s > cur_e:
+                total += cur_e - cur_s
+                cur_s, cur_e = s, e
+            else:
+                cur_e = max(cur_e, e)
+        total += cur_e - cur_s
+    return total
 
 
 class ClusterRuntime:
@@ -279,7 +323,8 @@ class ClusterRuntime:
                  horizon: float = 60.0, record_schedule: bool = False,
                  faults: Optional[FaultPlan] = None, ckpt_every: int = 0,
                  health: Optional[HealthMonitor] = None,
-                 degrade: Optional[DegradePolicy] = None):
+                 degrade: Optional[DegradePolicy] = None,
+                 round_quantum: float = 0.0):
         self.jobs = list(jobs)
         self.jobs_by_id = {j.job_id: j for j in self.jobs}
         self.scheduler = scheduler
@@ -296,6 +341,16 @@ class ClusterRuntime:
         self.ckpt_every = ckpt_every
         self.health = health
         self.degrade = degrade
+        if round_quantum < 0:
+            raise ValueError(
+                f"round_quantum must be >= 0, got {round_quantum}")
+        # scheduler-tick width for concurrent backends: events landing
+        # within one quantum of the popped event are drained into the same
+        # placement round, so near-simultaneous iteration completions on
+        # different submeshes keep overlapping instead of degenerating
+        # into alternating single-task rounds.  Only consulted when the
+        # concurrent path engages; 0.0 still batches equal-time events.
+        self.round_quantum = round_quantum
         for j in self.jobs:   # fail fast on unplaceable jobs (would livelock)
             if j.num_workers > num_machines:
                 raise ValueError(f"job {j.job_id} needs {j.num_workers} "
@@ -444,11 +499,34 @@ class ClusterRuntime:
             self.backend.job_rollback(job, k, now)
 
         fruitless = 0
+        # spatial backends overlap machines inside a round; the concurrent
+        # path only engages with faults/health off (their bookkeeping
+        # assumes serial commit order)
+        conc = (getattr(self.backend, "concurrent_rounds", False)
+                and plan is None and health is None)
+        # one pool for the whole session: thread spawn is ~ms-scale, which
+        # at small step sizes would eat the very overlap the concurrent
+        # rounds exist to win (created lazily on the first 2-machine round)
+        pool: ThreadPoolExecutor = None
         while events or ready:
             if events:
                 now, _, kind, payload = heapq.heappop(events)
                 if now > self.max_time:
                     break
+                # concurrent rounds act like a scheduler tick: events
+                # within one quantum join this round, so simultaneous
+                # arrivals / near-simultaneous iteration completions are
+                # placed together (and genuinely overlap) instead of each
+                # triggering its own single-task round
+                batch = [(now, kind, payload)]
+                while (conc and events
+                       and events[0][0] <= batch[0][0] + self.round_quantum
+                       and events[0][0] <= self.max_time):
+                    t2, _, k2, p2 = heapq.heappop(events)
+                    batch.append((t2, k2, p2))
+            else:
+                batch = []
+            for now, kind, payload in batch:
                 if kind == "arrival":
                     job = jobs_by_id[payload]
                     self.backend.job_arrived(job, now)
@@ -520,7 +598,118 @@ class ClusterRuntime:
             # ask the policy to place whatever is ready
             accepted_any = False
             accepted_ids: set = set()
-            if ready:
+            if ready and conc:
+                placed = self.scheduler.place(ready, state, now, jobs_by_id,
+                                              gamma)
+                # Phase A (serial): prefilter in placement order and group
+                # candidates into per-machine chains — the only intra-
+                # round dependency is same-machine ordering
+                chains: Dict[int, List[Assignment]] = {}
+                seen_ids: set = set()
+                for a in placed:
+                    t = a.task
+                    if id(t) in seen_ids:
+                        continue        # policy returned the task twice
+                    jid = t.job_id
+                    if jid in failed:
+                        seen_ids.add(id(t))
+                        accepted_ids.add(id(t))     # sweep out of ready
+                        tgen.pop(id(t), None)
+                        continue
+                    if a.machine in state.down:
+                        continue        # no placements on a dead machine
+                    seen_ids.add(id(t))
+                    chains.setdefault(a.machine, []).append(a)
+
+                def run_chain(m: int, chain: List[Assignment]) -> list:
+                    # shared state is read-only here; all mutation happens
+                    # in the serial apply phase below
+                    recs = []
+                    free_local = state.machine_free_at[m]
+                    chain_failed: set = set()
+                    for a in chain:
+                        t = a.task
+                        jid = t.job_id
+                        if jid in chain_failed:
+                            continue    # swept as failed next round
+                        prev = state.last_machine.get((jid, t.worker_id))
+                        mig = prev is not None and prev != m
+                        start = max(a.start, now, free_local, t.ready_time)
+                        if mig:
+                            start += gamma * jobs_by_id[jid].model_size_gb
+                        if start > now + horizon:
+                            continue    # outside the planning interval
+                        try:
+                            duration = self.backend.run_task(
+                                jobs_by_id[jid], t, m, start, mig)
+                        except TaskFailedError as e:
+                            elapsed = max(0.0, e.elapsed_s)
+                            free_local = start + elapsed
+                            chain_failed.add(jid)
+                            recs.append(("failed", t, start, elapsed, e))
+                            continue
+                        free_local = start + duration
+                        recs.append(("done", t, start, duration, mig))
+                    return recs
+
+                order = sorted(chains)
+                if len(order) <= 1:     # nothing to overlap
+                    results = {m: run_chain(m, chains[m]) for m in order}
+                else:
+                    if pool is None:
+                        pool = ThreadPoolExecutor(
+                            max_workers=self.num_machines,
+                            thread_name_prefix="round")
+                    futs = {m: pool.submit(run_chain, m, chains[m])
+                            for m in order}
+                    results = {m: futs[m].result() for m in order}
+
+                # Phase C (serial, deterministic machine order): commit
+                for m in order:
+                    for rec in results[m]:
+                        kind, t, start = rec[0], rec[1], rec[2]
+                        jid = t.job_id
+                        if jid in failed:
+                            # a sibling machine's chain failed this job
+                            # first; discard the committed-too-late step
+                            accepted_ids.add(id(t))
+                            tgen.pop(id(t), None)
+                            continue
+                        if kind == "failed":
+                            elapsed, e = rec[3], rec[4]
+                            accepted_ids.add(id(t))
+                            state.machine_free_at[m] = start + elapsed
+                            busy += elapsed
+                            wasted += elapsed + ckpt_busy[jid]
+                            ckpt_busy[jid] = 0.0
+                            failed.add(jid)
+                            failed_jobs.append(jid)
+                            account_inflight(jid, None)
+                            drop_job_tasks(jid)
+                            recovery_pending.pop(jid, None)
+                            self.backend.job_failed(jobs_by_id[jid], now,
+                                                    e.reason)
+                            accepted_any = True
+                            continue
+                        duration, mig = rec[3], rec[4]
+                        accepted_ids.add(id(t))
+                        if mig:
+                            migrations[jid] += 1
+                        end = start + duration
+                        state.machine_free_at[m] = max(
+                            state.machine_free_at[m], end)
+                        state.last_machine[(jid, t.worker_id)] = m
+                        busy += duration
+                        inflight[id(t)] = (t, m, start, end)
+                        if self.record_schedule:
+                            log_idx[id(t)] = len(schedule_log)
+                            schedule_log.append((m, start, end, jid,
+                                                 t.worker_id, t.iteration))
+                        heapq.heappush(events, (end, seq, "task_done",
+                                                (t, m)))
+                        seq += 1
+                        accepted_any = True
+            elif ready:
                 placed = self.scheduler.place(ready, state, now, jobs_by_id,
                                               gamma)
                 for a in placed:
@@ -650,14 +839,20 @@ class ClusterRuntime:
                 seq += 1
             if not ready and not events:
                 break
+        if pool is not None:
+            pool.shutdown(wait=False)
 
         makespan = max(done_jobs.values()) if done_jobs else now
         jct = {jid: done_jobs[jid] - jobs_by_id[jid].arrival
                for jid in done_jobs}
-        util = (busy / (makespan * self.num_machines) if makespan > 0
-                else 0.0)
-        goodput = ((busy - wasted) / (makespan * self.num_machines)
-                   if makespan > 0 else 0.0)
+        # capacity excludes crashed-out machine-seconds; with no plan (or
+        # no crashes) down_s is exactly 0.0 and the arithmetic is
+        # bit-identical to the historical busy / (makespan * machines)
+        down_s = (_down_seconds(plan, makespan, self.num_machines)
+                  if plan is not None and makespan > 0 else 0.0)
+        capacity = makespan * self.num_machines - down_s
+        util = busy / capacity if capacity > 0 else 0.0
+        goodput = (busy - wasted) / capacity if capacity > 0 else 0.0
         # jobs still mid-recovery when the session ended (e.g. failed, or
         # the horizon cut them off): their window closes at `now`
         for jid, (t0, _target) in recovery_pending.items():
@@ -673,4 +868,5 @@ class ClusterRuntime:
                          crashes=crashes_n, killed_tasks=killed_tasks,
                          retried_tasks=retried_tasks,
                          degraded_steps=(degrade.applied if degrade
-                                         else 0))
+                                         else 0),
+                         down_s=down_s)

@@ -7,8 +7,9 @@ AOT (``engine.aot``), and delegates the per-iteration depth choice to a
 pluggable ``DepthPolicy`` (``engine.policies``) — the knob the paper's
 cluster scheduler controls.
 """
-from repro.engine import aot, policies  # noqa: F401
+from repro.engine import aot, policies, stepcache  # noqa: F401
 from repro.engine.engine import SPBEngine  # noqa: F401
+from repro.engine.fused import FusedEngine, stack_batches  # noqa: F401
 from repro.engine.policies import (  # noqa: F401
     CostModelPolicy, CyclePolicy, DepthPolicy, FullBackpropPolicy,
     SchedulerHookPolicy, depth_to_bwd_stages, make_policy)

@@ -77,13 +77,13 @@ def _env_sig(mesh) -> Dict[str, Any]:
     }
 
 
-def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
-              donate: bool, extra=None) -> str:
-    """Digest identifying one compiled step table.
-
-    Only fields that reach the compiled program participate — checkpoint /
-    logging knobs don't invalidate the cache.  ``tcfg``/``spb`` may be
-    None for tables with no training/SPB leg (the serve engine)."""
+def step_ident(cfg, tcfg, spb, *, zero1: bool, donate: bool) -> Dict[str, Any]:
+    """The config component shared by every step-identity key (AOT cache,
+    process-wide step cache): model/train/SPB configs with the fields
+    that never reach the compiled program scrubbed out.  Checkpoint and
+    logging knobs don't invalidate caches, and without gradient
+    compression the data seed doesn't either — so same-config jobs that
+    differ only by seed share one compiled step."""
     train = dataclasses.asdict(tcfg) if tcfg is not None else {}
     for k in ("checkpoint_every", "checkpoint_dir", "keep_checkpoints",
               "log_every"):
@@ -91,14 +91,26 @@ def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
     if train.get("compression") == "none":
         # seed only reaches the compiled step through the compression RNG
         train.pop("seed", None)
-    ident = {
-        "fmt": _FMT_VERSION,
+    return {
         "model": dataclasses.asdict(cfg),
         "train": train,
         "spb": dataclasses.asdict(spb) if spb is not None else {},
-        "batch": _shape_sig(batch_shapes),
         "zero1": zero1,
         "donate": donate,
+    }
+
+
+def cache_key(cfg, tcfg, spb, mesh, batch_shapes, *, zero1: bool,
+              donate: bool, extra=None) -> str:
+    """Digest identifying one compiled step table.
+
+    Only fields that reach the compiled program participate — checkpoint /
+    logging knobs don't invalidate the cache.  ``tcfg``/``spb`` may be
+    None for tables with no training/SPB leg (the serve engine)."""
+    ident = {
+        "fmt": _FMT_VERSION,
+        **step_ident(cfg, tcfg, spb, zero1=zero1, donate=donate),
+        "batch": _shape_sig(batch_shapes),
         "env": _env_sig(mesh),
     }
     if extra:

@@ -25,6 +25,8 @@ the engine's internals; this module owns their compilation and lifecycle.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional
@@ -38,7 +40,7 @@ from repro.config import (ModelConfig, SPBConfig, TrainConfig, snap_depth,
                           snap_depth_to_stages)
 from repro.dist import sharding as shd
 from repro.dist import steps as steps_lib
-from repro.engine import aot
+from repro.engine import aot, stepcache
 from repro.engine.policies import DepthPolicy, make_policy
 from repro.launch.mesh import make_host_mesh, parallel_config_for
 
@@ -85,7 +87,8 @@ class SPBEngine:
                  mesh=None, policy: Optional[DepthPolicy] = None,
                  donate: bool = True, zero1: bool = True,
                  parallelism: str = "spmd",
-                 pipeline_schedule: str = "1f1b"):
+                 pipeline_schedule: str = "1f1b",
+                 shared_cache: bool = True):
         if parallelism not in ("spmd", "pipeline"):
             raise ValueError(f"unknown parallelism {parallelism!r}; "
                              f"known: spmd, pipeline")
@@ -96,30 +99,27 @@ class SPBEngine:
         self.pipeline_schedule = pipeline_schedule
         if parallelism == "pipeline":
             from repro.launch.mesh import make_pipeline_mesh
-            self.mesh = mesh if mesh is not None else make_pipeline_mesh()
-            pcfg = parallel_config_for(self.mesh)
+            if mesh is None:
+                mesh = make_pipeline_mesh()
+            pcfg = parallel_config_for(mesh)
             if pcfg.pp_axis is None:
                 raise ValueError("pipeline parallelism needs a mesh with a "
                                  "'stage' axis (launch.mesh."
                                  "make_pipeline_mesh)")
-            self.parallel = pcfg
             self.pipeline_stages = pcfg.num_pp
-            # the composable data axis: microbatches shard over it inside
-            # the schedule interpreter, ZeRO-1 moments shard over it per
-            # stage; 1 when the session mesh is stage-only
-            self.pipeline_data = pcfg.num_dp
             # stage-snap the whole depth machinery (schedules, policies,
             # LR-rescale contributors) to what the pipeline can freeze
             if self.spb.pipeline_stages != self.pipeline_stages:
                 self.spb = dataclasses.replace(
                     self.spb, pipeline_stages=self.pipeline_stages)
         else:
-            self.mesh = mesh if mesh is not None else make_host_mesh()
-            self.parallel = parallel_config_for(self.mesh)
+            if mesh is None:
+                mesh = make_host_mesh()
             self.pipeline_stages = 0
             self.pipeline_data = 0
         self.donate = donate
         self.zero1 = zero1
+        self.shared_cache = shared_cache
         self.policy = policy or make_policy("cycle", cfg, self.spb)
 
         # the old dist.steps functions are the engine's internals
@@ -131,24 +131,12 @@ class SPBEngine:
         else:
             self._raw = steps_lib.build_spb_train_steps(cfg, tcfg, self.spb)
 
-        # shapes + shardings computed exactly once for the whole session
-        # (the pre-engine drivers recomputed these per depth and dropped
-        # the result)
+        # shapes computed exactly once for the whole session (the
+        # pre-engine drivers recomputed these per depth and dropped the
+        # result); mesh-dependent specs/shardings live in _bind_mesh so
+        # resize() can re-derive them for a new submesh
         self.state_shapes: State = steps_lib.train_state_shapes(cfg, tcfg)
-        if parallelism == "pipeline":
-            self.state_specs = shd.pipeline_state_pspec(
-                self.state_shapes, mesh=self.mesh, zero1=zero1)
-        else:
-            self.state_specs = shd.state_pspec(
-                self.state_shapes, mesh=self.mesh, zero1=zero1)
-        self.state_shardings = jax.tree.map(
-            lambda s: NamedSharding(self.mesh, s), self.state_specs,
-            is_leaf=lambda x: isinstance(x, P))
-        # one prefix sharding covers every batch leaf: dim 0 over the DP
-        # axes, the rest replicated
-        self.batch_sharding = NamedSharding(
-            self.mesh, shd.spec_for(("batch",), mesh=self.mesh))
-        self._metrics_sharding = NamedSharding(self.mesh, P())
+        self._bind_mesh(mesh)
 
         self._steps: Dict[Any, Callable] = {}      # jitted or AOT-loaded
         self._compiled: Dict[Any, Any] = {}        # AOT Compiled objects
@@ -157,6 +145,31 @@ class SPBEngine:
         self.state: Optional[State] = None
         self.last_depth: Any = None
         self._auto_step = 0
+        self.resizes = 0
+
+    def _bind_mesh(self, mesh) -> None:
+        """Derive everything mesh-dependent: parallel config, state/batch
+        shardings.  Called from __init__ and again on every resize()."""
+        self.mesh = mesh
+        self.parallel = parallel_config_for(mesh)
+        if self.parallelism == "pipeline":
+            # the composable data axis: microbatches shard over it inside
+            # the schedule interpreter, ZeRO-1 moments shard over it per
+            # stage; 1 when the session mesh is stage-only
+            self.pipeline_data = self.parallel.num_dp
+            self.state_specs = shd.pipeline_state_pspec(
+                self.state_shapes, mesh=mesh, zero1=self.zero1)
+        else:
+            self.state_specs = shd.state_pspec(
+                self.state_shapes, mesh=mesh, zero1=self.zero1)
+        self.state_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        # one prefix sharding covers every batch leaf: dim 0 over the DP
+        # axes, the rest replicated
+        self.batch_sharding = NamedSharding(
+            mesh, shd.spec_for(("batch",), mesh=mesh))
+        self._metrics_sharding = NamedSharding(mesh, P())
 
     # -- state lifecycle ---------------------------------------------------
 
@@ -202,17 +215,81 @@ class SPBEngine:
             out_shardings=(self.state_shardings, self._metrics_sharding),
             donate_argnums=(0,) if self.donate else ())
 
+    def _step_signature(self) -> str:
+        """Digest of everything that determines a step's compiled program
+        except (depth, mesh) — the step-cache key's config component.
+        Reuses the AOT key's train-config scrub, so engines differing only
+        by data seed / checkpoint knobs share entries."""
+        ident = aot.step_ident(self.cfg, self.tcfg, self.spb,
+                               zero1=self.zero1, donate=self.donate)
+        ident["parallelism"] = self.parallelism
+        if self.parallelism == "pipeline":
+            ident["pipeline_schedule"] = self.pipeline_schedule
+        blob = json.dumps(ident, sort_keys=True, default=str).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def step_cache_key(self, key: Any):
+        """The process-wide step-cache key for one depth entry:
+        (config digest, depth tag, mesh fingerprint)."""
+        if not hasattr(self, "_step_sig"):
+            self._step_sig = self._step_signature()
+        return (self._step_sig, aot._depth_tag(key),
+                stepcache.mesh_fingerprint(self.mesh))
+
     def step_fn(self, key: Any) -> Callable:
         """The (state, batch) -> (state, metrics) executable for a depth
-        key (None = full backprop, int = suffix depth, 'mb' = cycle)."""
+        key (None = full backprop, int = suffix depth, 'mb' = cycle).
+
+        With ``shared_cache`` (the default) the jitted wrapper comes from
+        the process-wide :data:`repro.engine.stepcache.GLOBAL` table, so
+        every co-located engine with the same (config, depth, submesh)
+        shares one wrapper — and one trace + compile."""
         if key not in self._steps:
             if self._frozen:
                 raise KeyError(
                     f"AOT step table has no entry for depth {key!r}; "
                     f"available: {sorted(map(str, self._steps))}")
             with jax.sharding.set_mesh(self.mesh):
-                self._steps[key] = self._jit(key)
+                if self.shared_cache:
+                    self._steps[key] = stepcache.GLOBAL.get_or_build(
+                        self.step_cache_key(key), lambda: self._jit(key))
+                else:
+                    self._steps[key] = self._jit(key)
         return self._steps[key]
+
+    # -- elastic resizing ---------------------------------------------------
+
+    def resize(self, mesh) -> "SPBEngine":
+        """Re-place this session onto a different (sub)mesh at an
+        iteration boundary — the burst-parallel knob.
+
+        Re-derives parallel config + shardings for the new mesh, reshards
+        the live train state onto it (``device_put``, the same
+        reshard-on-restore path checkpoint recovery uses) and drops the
+        mesh-bound step entries.  Steps re-resolve through the shared
+        step cache, so bouncing back to a previously-used submesh
+        re-traces nothing.  An AOT-frozen table is abandoned (frozen
+        executables are placement-specific); pipeline sessions can only
+        resize onto a mesh with the same stage count.
+        """
+        if mesh is self.mesh:
+            return self
+        if self.parallelism == "pipeline":
+            pcfg = parallel_config_for(mesh)
+            if pcfg.pp_axis is None or pcfg.num_pp != self.pipeline_stages:
+                raise ValueError(
+                    f"pipeline session with {self.pipeline_stages} stages "
+                    f"cannot resize onto mesh {tuple(mesh.axis_names)}="
+                    f"{tuple(mesh.devices.shape)}")
+        self._bind_mesh(mesh)
+        self._steps = {}
+        self._compiled = {}
+        self._frozen = False
+        self._warned_depths = set()
+        if self.state is not None:
+            self.attach_state(self.state)
+        self.resizes += 1
+        return self
 
     def resolve_depth(self, depth: Optional[int]) -> Any:
         """Map a policy-requested depth to a step-table key.
@@ -314,13 +391,21 @@ class SPBEngine:
 
     def aot_cache_path(self, batch_specs, cache_root=None) -> Path:
         root = Path(cache_root) if cache_root else aot.DEFAULT_CACHE
-        extra = (None if self.parallelism == "spmd" else
-                 {"parallelism": self.parallelism,
-                  "pipeline_schedule": self.pipeline_schedule,
-                  "pipeline_data": self.pipeline_data})
+        extra = {}
+        if self.parallelism != "spmd":
+            extra.update(parallelism=self.parallelism,
+                         pipeline_schedule=self.pipeline_schedule,
+                         pipeline_data=self.pipeline_data)
+        if self.mesh.devices.size != jax.device_count():
+            # a proper submesh: the executable is pinned to concrete
+            # devices, so spatially co-located engines on *different*
+            # submeshes must not share an artifact (same-submesh engines
+            # still dedupe to one entry)
+            extra["devices"] = [int(d.id) for d in self.mesh.devices.flat]
         return root / aot.cache_key(self.cfg, self.tcfg, self.spb, self.mesh,
                                     batch_specs, zero1=self.zero1,
-                                    donate=self.donate, extra=extra)
+                                    donate=self.donate,
+                                    extra=extra or None)
 
     def export_aot(self, path, batch_specs=None) -> Path:
         """Serialize the compiled step table to ``path`` (compiling first

@@ -1,0 +1,129 @@
+"""HFTA-style horizontal fusion: J same-shaped jobs, one vmapped step.
+
+Swarms of small tenant jobs waste accelerators twice — each job
+under-fills the hardware, and each pays its own kernel launches and
+scheduling turn.  Horizontal fusion (Wang et al., HFTA) stacks the
+*models* instead: J jobs with identical (config, SPB, optimizer) shapes
+train as one ``jax.vmap``-ed train step whose state carries a leading
+``(J, ...)`` jobs axis.  One compiled program, one scheduling slot, J
+jobs advancing in lockstep — with per-job metrics unstacked on poll.
+
+``FusedEngine`` is an :class:`~repro.engine.SPBEngine` whose raw step
+table is vmapped over the jobs axis and whose state/batch shardings gain
+a leading replicated dim.  Everything else — depth policies, the shared
+step cache, AOT export, donation — is inherited.  The one semantic
+constraint is HFTA's own: the group shares each iteration's SPB depth
+(one program runs all J jobs), so the scheduler degrades or deepens the
+group as a unit.
+
+>>> from repro.config import SPBConfig, TrainConfig
+>>> from repro.configs import reduced_config
+>>> eng = FusedEngine(reduced_config("yi-6b"), TrainConfig(),
+...                   SPBConfig(mode="temporal", k=2), num_jobs=3)
+>>> eng.state_shapes["step"].shape          # leading jobs axis everywhere
+(3,)
+>>> eng.depth_keys()
+[None, 2, 4]
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.dist import steps as steps_lib
+from repro.engine.engine import SPBEngine
+from repro.launch.mesh import parallel_config_for
+
+
+def stack_batches(batches: Sequence[Any]) -> Any:
+    """Stack per-job batches onto the leading jobs axis (host-side)."""
+    return jax.tree.map(lambda *xs: np.stack(xs), *batches)
+
+
+class FusedEngine(SPBEngine):
+    """One training session running ``num_jobs`` stacked tenants."""
+
+    def __init__(self, cfg, tcfg, spb_cfg=None, *, num_jobs: int, **kw):
+        if num_jobs < 1:
+            raise ValueError(f"num_jobs must be >= 1, got {num_jobs}")
+        if kw.get("parallelism", "spmd") != "spmd":
+            raise ValueError("horizontal fusion composes with spmd "
+                             "sessions only (a fused pipeline would nest "
+                             "vmap over shard_map)")
+        self.num_jobs = num_jobs
+        self._base_shapes = None
+        super().__init__(cfg, tcfg, spb_cfg, **kw)
+        self._raw = {k: jax.vmap(fn) for k, fn in self._raw.items()}
+        self._base_shapes = self.state_shapes
+        self.state_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((num_jobs,) + tuple(s.shape),
+                                           s.dtype), self.state_shapes)
+        self._bind_mesh(self.mesh)      # now with the stacked overrides
+
+    def _bind_mesh(self, mesh) -> None:
+        if self._base_shapes is None:   # super().__init__ path: unstacked
+            return super()._bind_mesh(mesh)
+        self.mesh = mesh
+        self.parallel = parallel_config_for(mesh)
+        base_specs = shd.state_pspec(self._base_shapes, mesh=mesh,
+                                     zero1=self.zero1)
+        # per-leaf spec shifted one dim right: jobs axis replicated, the
+        # base sharding applies to the per-job dims behind it
+        self.state_specs = jax.tree.map(
+            lambda p: P(None, *p), base_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.state_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.batch_sharding = NamedSharding(
+            mesh, P(None, *shd.spec_for(("batch",), mesh=mesh)))
+        self._metrics_sharding = NamedSharding(mesh, P())
+
+    def _raw_step(self, key: Any) -> Callable:
+        if key not in self._raw:
+            self._raw[key] = jax.vmap(steps_lib.make_train_step(
+                self.cfg, self.tcfg, self.spb, depth=key))
+        return self._raw[key]
+
+    def step_cache_key(self, key: Any):
+        return super().step_cache_key(key) + (("fused", self.num_jobs),)
+
+    # -- stacked state lifecycle -------------------------------------------
+
+    def init_state(self, key):
+        """Split ``key`` into one init key per fused job."""
+        return self.init_states(jax.random.split(key, self.num_jobs))
+
+    def init_states(self, keys_or_seeds):
+        """Initialize all J tenants (distinct params per job).  Accepts a
+        batch of PRNG keys or a list of int seeds — the per-tenant data
+        seeds the cluster backend already tracks."""
+        ks = keys_or_seeds
+        if not hasattr(ks, "dtype") or not jax.dtypes.issubdtype(
+                getattr(ks, "dtype", None), jax.dtypes.prng_key):
+            seeds = np.asarray([int(s) for s in ks], dtype=np.uint32)
+            ks = jax.vmap(jax.random.key)(seeds)
+        with jax.sharding.set_mesh(self.mesh):
+            state = jax.vmap(
+                lambda k: steps_lib.init_train_state(k, self.cfg,
+                                                     self.tcfg))(ks)
+        return self.attach_state(state)
+
+    @property
+    def step_count(self) -> int:
+        if self.state is None:
+            return 0
+        return int(np.asarray(self.state["step"])[0])
+
+    # -- per-job views ------------------------------------------------------
+
+    def per_job_metrics(self, metrics: Dict[str, jax.Array]) -> List[dict]:
+        """Unstack one fused step's metrics into J per-job dicts."""
+        host = {k: np.asarray(v) for k, v in metrics.items()}
+        return [{k: v[i] for k, v in host.items()}
+                for i in range(self.num_jobs)]

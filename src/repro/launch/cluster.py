@@ -12,6 +12,8 @@ Examples (CPU host mesh, reduced configs):
       --workers 2 --batch 4 --seq 32
   python -m repro.launch.cluster --jobs 3 --archs yi-6b,minicpm3-4b \\
       --scheduler jigsaw --iters 5 --aot-cache results/aot_cache
+  python -m repro.launch.cluster --jobs 2 --machines 2 --spatial \\
+      --iters 4          # disjoint submeshes, concurrent train steps
   python -m repro.launch.cluster --sim ...      # same session, DES only
 """
 from __future__ import annotations
@@ -24,6 +26,7 @@ from repro.cluster import (ClusterRuntime, DegradePolicy, FaultPlan,
                            HealthMonitor, LiveBackend, make_live_job)
 from repro.config import SPBConfig, TrainConfig
 from repro.configs import get_config, reduced_config
+from repro.engine import stepcache
 from repro.jigsaw.schedulers import ALL_SCHEDULERS
 
 
@@ -56,7 +59,13 @@ def build_session(args):
         backend = SimBackend()
         specs = [lj.spec for lj in live_jobs]
     else:
+        submeshes = None
+        if getattr(args, "spatial", False):
+            from repro.launch.mesh import make_submeshes
+            submeshes = make_submeshes(count=args.machines)
         backend = LiveBackend(live_jobs, verbose=not args.quiet,
+                              submeshes=submeshes,
+                              fuse=getattr(args, "fuse", False),
                               aot_cache=args.aot_cache or None,
                               ckpt_dir=getattr(args, "ckpt_dir", "") or None,
                               max_retries=getattr(args, "max_retries", 2))
@@ -67,7 +76,8 @@ def build_session(args):
         machine_mem_gb=args.mem_gb, gamma=args.gamma, horizon=args.horizon,
         record_schedule=True, faults=plan,
         ckpt_every=getattr(args, "ckpt_every", 0),
-        health=health, degrade=degrade)
+        health=health, degrade=degrade,
+        round_quantum=getattr(args, "round_quantum", 0.0))
     return runtime, backend
 
 
@@ -99,6 +109,24 @@ def main(argv=None):
     ap.add_argument("--mem-gb", type=float, default=16.0)
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spatial", action="store_true",
+                    help="machine slot i = disjoint submesh i "
+                         "(launch.mesh.make_submeshes): accepted "
+                         "placements run as genuinely concurrent train "
+                         "steps; jobs resize between submeshes as the "
+                         "scheduler moves them")
+    ap.add_argument("--round-quantum", type=float, default=0.05,
+                    help="scheduler-tick width (virtual seconds) for "
+                         "spatial mode: events within one quantum join "
+                         "the same placement round so submeshes keep "
+                         "overlapping (ignored without --spatial)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="HFTA-style horizontal fusion: same-shaped jobs "
+                         "stack into one vmapped train step scheduled as "
+                         "the group leader")
+    ap.add_argument("--compilation-cache-dir", default="",
+                    help="jax persistent compilation cache directory "
+                         "(XLA executables persist across processes)")
     ap.add_argument("--aot-cache", default="")
     ap.add_argument("--fault-plan", default="",
                     help="inject faults, ';'-separated (virtual seconds): "
@@ -128,6 +156,10 @@ def main(argv=None):
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
+    cc_before = None
+    if args.compilation_cache_dir:
+        cc_before = stepcache.enable_persistent_compilation_cache(
+            args.compilation_cache_dir)
     runtime, backend = build_session(args)
     t0 = time.time()
     res = runtime.run()
@@ -149,12 +181,24 @@ def main(argv=None):
     distinct = sorted(set().union(
         *(set(s["depths"]) for s in summary.values())) if summary else set(),
         key=str)
+    scheduled = len(runtime.jobs)     # fused groups schedule as one job
     print(f"[cluster] scheduler={args.scheduler} "
-          f"jobs_done={len(res.jct)}/{args.jobs} "
+          f"jobs_done={len(res.jct)}/{scheduled} "
           f"distinct_depths={distinct} makespan={res.makespan:.2f}s "
           f"util={res.util:.3f} goodput={res.goodput:.3f} "
           f"migrations={sum(res.migrations.values())} wall={wall:.1f}s",
           flush=True)
+    cache_stats = stepcache.GLOBAL.stats()
+    if isinstance(backend, LiveBackend):
+        print(f"[cluster] stepcache hits={cache_stats['hits']} "
+              f"misses={cache_stats['misses']} "
+              f"entries={cache_stats['entries']} "
+              f"max_concurrent={backend.max_concurrent_tasks} "
+              f"resizes={sum(backend.resizes.values())} "
+              f"fused_groups={len(backend.fused)}", flush=True)
+    if cc_before is not None:
+        print(stepcache.persistent_cache_report(
+            args.compilation_cache_dir, cc_before), flush=True)
     if res.crashes or res.task_retries or res.failed_jobs:
         print(f"[cluster] faults: crashes={res.crashes} "
               f"retries={res.task_retries} "
@@ -173,13 +217,21 @@ def main(argv=None):
                "lost_iterations": res.lost_iterations,
                "recovery_s": res.recovery_s,
                "failed_jobs": res.failed_jobs,
-               "degraded_steps": res.degraded_steps, "summary": summary}
+               "degraded_steps": res.degraded_steps, "summary": summary,
+               "wall_s": wall, "spatial": bool(args.spatial),
+               "stepcache": cache_stats}
+        if isinstance(backend, LiveBackend):
+            rec.update(
+                max_concurrent_tasks=backend.max_concurrent_tasks,
+                resizes=backend.resizes,
+                fused={str(k): v for k, v in backend.fused.items()},
+                aot_events=backend.aot_events)
         with open(args.json_out, "w") as f:
             json.dump(rec, f, indent=2, default=str)
     backend.close()
 
-    if len(res.jct) != args.jobs:
-        raise SystemExit(f"only {len(res.jct)}/{args.jobs} jobs completed")
+    if len(res.jct) != scheduled:
+        raise SystemExit(f"only {len(res.jct)}/{scheduled} jobs completed")
     # live-only assertion: the DES never observes executed depths
     if args.require_distinct_depths and not args.sim and len(distinct) < 2:
         raise SystemExit(f"expected >=2 distinct SPB depths, saw {distinct}")

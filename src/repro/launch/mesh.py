@@ -8,7 +8,9 @@ per deployment); SPB's DP-axis semantics extend over ('pod', 'data').
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 
@@ -64,6 +66,83 @@ def make_pipeline_mesh(num_stages: Optional[int] = None, *,
                              axis_types=(jax.sharding.AxisType.Auto,) * 3)
     return jax.make_mesh((n, data_parallel), ("stage", "data"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def split_devices(sizes: Sequence[int],
+                  devices: Optional[Sequence] = None) -> List[list]:
+    """Partition ``devices`` (default: ``jax.devices()``) into disjoint
+    contiguous groups of the given sizes.  Pure bookkeeping over any
+    sequence — the submesh invariants are testable with plain ints:
+
+    >>> split_devices([1, 3], devices=list(range(4)))
+    [[0], [1, 2, 3]]
+    >>> split_devices([2, 2], devices=list(range(3)))
+    Traceback (most recent call last):
+        ...
+    ValueError: submesh sizes [2, 2] need 4 devices, have 3
+    """
+    if devices is None:
+        devices = jax.devices()
+    sizes = list(sizes)
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"submesh sizes must be >= 1, got {sizes}")
+    need = sum(sizes)
+    if need > len(devices):
+        raise ValueError(f"submesh sizes {sizes} need {need} devices, "
+                         f"have {len(devices)}")
+    groups, at = [], 0
+    for s in sizes:
+        groups.append(list(devices[at:at + s]))
+        at += s
+    return groups
+
+
+def make_submeshes(sizes: Optional[Sequence[int]] = None, *,
+                   count: Optional[int] = None,
+                   devices: Optional[Sequence] = None,
+                   model_parallel: int = 1) -> List[jax.sharding.Mesh]:
+    """Disjoint ``(data, model)`` submeshes for spatial multi-job
+    co-location: each machine slot of the cluster runtime maps to one
+    submesh, so co-located jobs run genuinely concurrent train steps on
+    separate device subsets.
+
+    Pass explicit per-submesh ``sizes``, or ``count`` to split the
+    devices as evenly as possible (earlier submeshes take the remainder).
+    Each size must divide by ``model_parallel``; the submesh shape is
+    ``(size // model_parallel, model_parallel)``.
+    """
+    if (sizes is None) == (count is None):
+        raise ValueError("pass exactly one of sizes= or count=")
+    if devices is None:
+        devices = jax.devices()
+    if sizes is None:
+        if count < 1 or count > len(devices):
+            raise ValueError(f"count={count} submeshes from "
+                             f"{len(devices)} devices")
+        base, extra = divmod(len(devices), count)
+        sizes = [base + (1 if i < extra else 0) for i in range(count)]
+    for s in sizes:
+        if s % model_parallel:
+            raise ValueError(f"submesh size {s} not divisible by "
+                             f"model_parallel={model_parallel}")
+    meshes = []
+    for group in split_devices(sizes, devices=devices):
+        grid = np.asarray(group, dtype=object).reshape(
+            len(group) // model_parallel, model_parallel)
+        meshes.append(jax.sharding.Mesh(grid, ("data", "model")))
+    assert_disjoint(meshes)
+    return meshes
+
+
+def assert_disjoint(meshes) -> None:
+    """The spatial invariant: no device belongs to two submeshes."""
+    seen: dict = {}
+    for i, m in enumerate(meshes):
+        for d in m.devices.flat:
+            if id(d) in seen:
+                raise ValueError(f"device {d} appears in submesh "
+                                 f"{seen[id(d)]} and {i}")
+            seen[id(d)] = i
 
 
 def parallel_config_for(mesh) -> ParallelConfig:

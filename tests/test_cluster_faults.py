@@ -388,3 +388,16 @@ def test_fault_plan_generate_is_seed_deterministic():
                                                                   **kw)
     assert FaultPlan.generate(seed=3, **kw) != FaultPlan.generate(seed=4,
                                                                   **kw)
+
+
+def test_util_denominator_excludes_downtime(sim_fault_session):
+    """Crashed machine-seconds leave the capacity denominator: util
+    reflects how well the *surviving* pool was used, so a fault-heavy
+    session is not under-reported vs the naive makespan * machines."""
+    res, _jobs, _ = sim_fault_session
+    down = sum(min(c.repaired_at, res.makespan) - min(c.at, res.makespan)
+               for c in PLAN.crashes)
+    assert down > 0
+    capacity = res.makespan * MACHINES - down
+    assert res.util == pytest.approx(res.machine_busy / capacity)
+    assert res.util > res.machine_busy / (res.makespan * MACHINES)
