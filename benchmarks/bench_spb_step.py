@@ -15,6 +15,12 @@ per device) — the 1F1B-vs-GPipe memory gap in numbers.  The pipeline
 rows run in a child process because the stage mesh needs
 ``--xla_force_host_platform_device_count`` set before jax initializes.
 
+A third row set (``--tensor-parallel``, default 2) prices the 3-D
+layouts on a ``(stage, model)`` mesh: replicated compute vs
+tensor-sharded stages vs tensor + sequence-parallel, per snapped depth,
+with measured collective counts/bytes and the roofline's predicted join
+traffic side by side.
+
   PYTHONPATH=src python benchmarks/bench_spb_step.py [--arch yi-6b]
 """
 from __future__ import annotations
@@ -139,6 +145,56 @@ def bench_pipeline(arch: str, batch: int, seq: int, k: int, reps: int,
             "pipeline_data": pipeline_data, "rows": rows}
 
 
+def bench_3d(arch: str, batch: int, seq: int, k: int, reps: int,
+             stages: int, microbatches: int, tp: int) -> dict:
+    """3-D layout rows on a ``(stage, model)`` mesh: replicated compute
+    vs tensor-sharded stages vs tensor + sequence-parallel, per snapped
+    SPB depth — step time, per-device temp bytes, measured collective
+    counts/bytes (``hlo.collectives``) and the roofline's predicted join
+    traffic side by side."""
+    from repro.analysis.roofline import pipeline_tp_collective_bytes
+    from repro.launch.mesh import make_pipeline_mesh
+
+    cfg = reduced_config(arch)
+    tcfg = TrainConfig(optimizer="adamw", learning_rate=1e-3,
+                       microbatches=microbatches)
+    spb = SPBConfig(mode="temporal", k=k)
+    mesh = make_pipeline_mesh(stages, model_parallel=tp)
+    b = make_batch(cfg, batch, seq)
+    layouts = [("replicated", dict(tensor_parallel=1)),
+               ("tensor", dict(tensor_parallel=tp)),
+               ("tensor+sp", dict(tensor_parallel=tp,
+                                  sequence_parallel=True))]
+    rows = []
+    for name, kw in layouts:
+        engine = SPBEngine(cfg, tcfg, spb, mesh=mesh,
+                           parallelism="pipeline", **kw)
+        for key in engine.depth_keys():
+            row = _measure(engine, b, key, reps)
+            compiled = engine.compile_table(engine.batch_specs_like(b),
+                                            depths=[key])[key]
+            cost = hlo.analyze(compiled.as_text(),
+                               num_partitions=stages * tp)
+            ma = compiled.memory_analysis()
+            bwd = depth_to_bwd_stages(cfg, key, stages)
+            row.update({
+                "layout": name,
+                "bwd_stages": bwd,
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "collectives": {op: {k2: round(v2, 1)
+                                     for k2, v2 in c.items()}
+                                for op, c in cost.collectives().items()},
+                "roofline_tp_collective_bytes": pipeline_tp_collective_bytes(
+                    cfg, batch // microbatches, seq, stages, microbatches,
+                    model_parallel=1 if name == "replicated" else tp,
+                    bwd_stages=bwd,
+                    sequence_parallel=name == "tensor+sp"),
+            })
+            rows.append(row)
+    return {"stages": stages, "model_parallel": tp,
+            "microbatches": microbatches, "rows": rows}
+
+
 def _spawn_pipeline_child(args) -> dict:
     env = dict(os.environ)
     env["SPB_BENCH_FORCE_DEVICES"] = str(args.pipeline_stages)
@@ -157,6 +213,26 @@ def _spawn_pipeline_child(args) -> dict:
     return json.loads(proc.stdout.split("PIPELINE_JSON:")[-1])
 
 
+def _spawn_3d_child(args) -> dict:
+    env = dict(os.environ)
+    env["SPB_BENCH_FORCE_DEVICES"] = str(
+        args.pipeline_stages * args.tensor_parallel)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, __file__, "--_3d-child",
+           "--arch", args.arch, "--batch", str(args.batch),
+           "--seq", str(args.seq), "--k", str(args.k),
+           "--reps", str(args.reps),
+           "--pipeline-stages", str(args.pipeline_stages),
+           "--pipeline-microbatches", str(args.pipeline_microbatches),
+           "--tensor-parallel", str(args.tensor_parallel)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"3-D bench child failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.split("PIPELINE_JSON:")[-1])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -167,7 +243,12 @@ def main():
     ap.add_argument("--pipeline-stages", type=int, default=2,
                     help="0 disables the pipeline row set")
     ap.add_argument("--pipeline-microbatches", type=int, default=4)
+    ap.add_argument("--tensor-parallel", type=int, default=2,
+                    help="model-axis size for the 3-D row set; "
+                         "0 disables it")
     ap.add_argument("--_pipeline-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--_3d-child", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--out", default=str(OUT))
     args = ap.parse_args()
@@ -178,10 +259,18 @@ def main():
                              args.pipeline_microbatches)
         print("PIPELINE_JSON:" + json.dumps(rec))
         return
+    if getattr(args, "_3d_child"):
+        rec = bench_3d(args.arch, args.batch, args.seq, args.k, args.reps,
+                       args.pipeline_stages, args.pipeline_microbatches,
+                       args.tensor_parallel)
+        print("PIPELINE_JSON:" + json.dumps(rec))
+        return
 
     rec = bench(args.arch, args.batch, args.seq, args.k, args.reps)
     if args.pipeline_stages > 0:
         rec["pipeline"] = _spawn_pipeline_child(args)
+        if args.tensor_parallel > 1:
+            rec["pipeline_3d"] = _spawn_3d_child(args)
     Path(args.out).write_text(json.dumps(rec, indent=2) + "\n")
     for r in rec["rows"]:
         print(f"depth={r['depth']!s:>4}  step={r['step_ms']:8.2f}ms  "
@@ -193,6 +282,12 @@ def main():
               f"flops={r['hlo_flops']:.3e}  bubble={r['bubble_fraction']} "
               f"ticks={r['ticks']} stash={r['stash_slots_act']}+"
               f"{r['stash_slots_cot']}={r['stash_bytes']/2**10:.0f}KiB")
+    for r in rec.get("pipeline_3d", {}).get("rows", []):
+        ag = r["collectives"].get("all-gather", {}).get("payload_bytes", 0)
+        print(f"3d[{r['layout']:>10}] depth={r['depth']!s:>4} "
+              f"step={r['step_ms']:8.2f}ms  temp={r['temp_bytes']:.2e}  "
+              f"coll={r['hlo_collective_bytes']:.2e} ag={ag:.2e} "
+              f"roofline={r['roofline_tp_collective_bytes']:.2e}")
     print(f"wrote {args.out}")
 
 

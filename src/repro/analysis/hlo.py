@@ -271,10 +271,27 @@ class CostSummary:
     num_collectives: int = 0
     bytes_by_site: Dict[str, float] = field(default_factory=dict)
     collective_by_site: Dict[str, float] = field(default_factory=dict)
+    # per base opcode, trip-count-weighted: op executions and the payload
+    # (result bytes; operand bytes for reduce-scatter) they move — the
+    # raw volumes the wire-byte ring model above scales by (n-1)/n
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    collective_payload: Dict[str, float] = field(default_factory=dict)
 
     def top_collectives(self, n: int = 12):
         return sorted(self.collective_by_site.items(),
                       key=lambda kv: -kv[1])[:n]
+
+    def collectives(self) -> Dict[str, Dict[str, float]]:
+        """Per-opcode report rows: ``{'all-gather': {'count': ...,
+        'payload_bytes': ..., 'wire_bytes': ...}, ...}`` — what the 3-D
+        layout tests and ``bench_spb_step.py`` read to prove boundary
+        all-gathers are gone and price the join collectives."""
+        keys = (set(self.collective_counts) | set(self.collective_payload)
+                | set(self.collective_breakdown))
+        return {k: {"count": self.collective_counts.get(k, 0.0),
+                    "payload_bytes": self.collective_payload.get(k, 0.0),
+                    "wire_bytes": self.collective_breakdown.get(k, 0.0)}
+                for k in sorted(keys)}
 
     def add_flops(self, opcode: str, n: float):
         self.flops += n
@@ -378,6 +395,11 @@ def analyze(text: str, num_partitions: int = 1) -> CostSummary:
                 s.collective_bytes += count * wire
                 s.collective_breakdown[base] = (
                     s.collective_breakdown.get(base, 0.0) + count * wire)
+                payload = in_b if base == "reduce-scatter" else out_b
+                s.collective_counts[base] = (
+                    s.collective_counts.get(base, 0.0) + count)
+                s.collective_payload[base] = (
+                    s.collective_payload.get(base, 0.0) + count * payload)
                 site = f"{base} {op.type_str.split('{')[0][:36]} {_op_name(op)[:64]}"
                 s.collective_by_site[site] = (
                     s.collective_by_site.get(site, 0.0) + count * wire)

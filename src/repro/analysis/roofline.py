@@ -253,6 +253,54 @@ def pipeline_stash_bytes(cfg: ModelConfig, microbatch: int, seq_len: int,
     return (act + cot) * per_slot
 
 
+def pipeline_tp_collective_bytes(cfg: ModelConfig, microbatch: int,
+                                 seq_len: int, num_stages: int,
+                                 num_microbatches: int, *,
+                                 model_parallel: int,
+                                 data_parallel: int = 1,
+                                 bwd_stages: Optional[int] = None,
+                                 sequence_parallel: bool = False) -> float:
+    """Per-device wire bytes of the in-stage tensor-parallel collectives
+    for one pipeline step — the traffic the explicit Megatron joins add
+    on top of the stage-boundary permutes.
+
+    Each transformer layer has two joins (attention-out, MLP-down).  A
+    join moves one residual-stream activation ``(mb/dp, seq, d_model)``:
+    an all-reduce (ring wire ``2(n-1)/n * act``) in the replicated-
+    activation layout, or an all-gather + reduce-scatter pair under
+    sequence parallelism — the same wire bytes, so the join term is
+    layout-independent.  The backward pass mirrors every join, so a
+    stage whose backward SPB truncation freezes (``bwd_stages``) pays
+    the forward half only.  Sequence parallelism adds the stage
+    inlet/outlet transitions: one all-gather of the stream per
+    microbatch at the outlet (forward) and the mirrored gather of the
+    adjoint at the inlet when the stage runs backward.
+    """
+    n = int(model_parallel)
+    if n <= 1:
+        return 0.0
+    if data_parallel < 1 or microbatch % data_parallel:
+        raise ValueError(f"microbatch size {microbatch} not divisible by "
+                         f"data_parallel={data_parallel}")
+    elem = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    act = (microbatch // data_parallel) * seq_len * cfg.d_model * elem
+    layers_per_stage = max(1, cfg.num_layers // max(num_stages, 1))
+    bwd = num_stages if bwd_stages is None else max(0, min(bwd_stages,
+                                                           num_stages))
+    # per-device step totals, averaged over stages (bwd truncation only
+    # spares the frozen stages; the deepest stage always pays both)
+    wire_join = 2.0 * (n - 1) / n * act
+    joins = 2 * layers_per_stage * num_microbatches
+    fwd_total = joins * wire_join
+    bwd_total = joins * wire_join * (bwd / max(num_stages, 1))
+    total = fwd_total + bwd_total
+    if sequence_parallel:
+        edge = (n - 1) / n * act
+        total += num_microbatches * edge                      # outlet gather
+        total += num_microbatches * edge * (bwd / max(num_stages, 1))
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Roofline table
 # ---------------------------------------------------------------------------

@@ -4,7 +4,13 @@ One device per stage over the mesh's ``stage`` axis, optionally times a
 ``data`` axis that shards every microbatch's batch dimension (the
 Megatron-style 2-D ``(stage, data)`` layout — each data slice runs the
 same tick program on its shard of the batch and the parameter gradients
-average over ``data`` at the end).  The interpreter walks the table tick
+average over ``data`` at the end), optionally times a ``model`` axis
+carrying tensor-sharded stage weights: ``param_specs`` place each leaf's
+column/row dim on ``model`` and ``stage_fn`` reduces its own joins with
+the explicit collectives in ``models/layers.py`` — no implicit boundary
+all-gather of weights ever appears in the HLO.  With ``zero2`` the
+parameter gradients leave the pipe reduce-scattered over ``data`` on the
+same per-leaf dim their ZeRO-1 moments shard.  The interpreter walks the table tick
 by tick; at every tick each stage runs *its own* branch of a
 ``lax.switch`` on ``axis_index`` — the branch is generated from the
 table column, so a stage traces exactly the work the schedule assigns it
@@ -69,7 +75,10 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                  loss_fn: Optional[Callable] = None, ys=None,
                  head_params=None, axis_name: str = "stage",
                  data_axis: Optional[str] = None,
-                 capture_input_grads: bool = False) -> Dict[str, Any]:
+                 capture_input_grads: bool = False,
+                 param_specs=None, tensor_axis: Optional[str] = None,
+                 sequence_parallel: bool = False,
+                 zero2: bool = False) -> Dict[str, Any]:
     """Interpret ``sched`` over the ambient mesh's ``axis_name`` axis.
 
     stage_params: pytree whose leaves are stacked ``(S, ...)`` (one slice
@@ -82,6 +91,18 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
     params, the (replicated) head params, and — when
     ``capture_input_grads`` — the cotangents of ``xs`` (for an embedding
     backward outside the pipe).
+
+    Tensor sharding: ``param_specs`` gives per-leaf PartitionSpecs for
+    ``stage_params`` (``stage`` on dim 0 plus Megatron column/row dims
+    over ``tensor_axis`` — see ``stage.stage_param_specs``) so each
+    device holds only its ``model`` slice of every weight; ``stage_fn``
+    must then reduce its joins itself (``make_stage_fn(tp_axis=...)``).
+    ``tensor_axis``/``sequence_parallel`` tell the interpreter which
+    grads come back *partial* over the model axis (sequence-parallel norm
+    scales) so it can finish their sum.  ``zero2`` reduce-scatters each
+    stage-grad leaf over the ``data`` axis on the dim its ZeRO-1 moments
+    shard (``sharding.zero2_spec``) instead of all-reducing — gradients
+    leave the pipe already in the moments' layout.
 
     Returns a dict with ``outs`` (last-stage outputs), ``loss`` (mean
     over all microbatch elements), ``stage_grads`` (stacked ``(S,
@@ -107,6 +128,42 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
     if d_axis and xs.shape[1] % d_size:
         raise ValueError(f"microbatch size {xs.shape[1]} not divisible by "
                          f"data-axis size {d_size}")
+    names = tuple(getattr(mesh, "axis_names", ()) or ())
+    if tensor_axis is not None and tensor_axis not in names:
+        raise ValueError(f"mesh {names} has no axis {tensor_axis!r}")
+    if sequence_parallel and tensor_axis is None:
+        raise ValueError("sequence_parallel requires tensor_axis")
+
+    is_p = lambda x: isinstance(x, P)   # noqa: E731
+    p_specs = (param_specs if param_specs is not None
+               else jax.tree.map(lambda _: P(axis_name), stage_params))
+    # which param leaves shard over the model axis: their grads are
+    # per-shard complete; the rest (norm scales) are replicated and —
+    # under sequence parallelism only — come back as partial sums
+    model_sharded = jax.tree.map(
+        lambda s: tensor_axis is not None and any(
+            tensor_axis in (e if isinstance(e, tuple) else (e,))
+            for e in s if e is not None),
+        p_specs, is_leaf=is_p)
+    if zero2 and d_axis is not None:
+        from repro.dist import sharding as shd
+        g_specs = jax.tree.map(
+            lambda s, l: shd.zero2_spec(s, l.shape, mesh),
+            p_specs, stage_params, is_leaf=is_p)
+    else:
+        g_specs = p_specs
+    # per-leaf dim (stacked coords) the grad reduce-scatters over, -1 for
+    # plain pmean: the dim whose entry g_specs added relative to p_specs
+    def _scatter_dim(ps, gs, nd):
+        pe = list(ps) + [None] * (nd - len(ps))
+        ge = list(gs) + [None] * (nd - len(gs))
+        for i, (a, b) in enumerate(zip(pe, ge)):
+            if a != b:
+                return i
+        return -1
+    scat_dims = jax.tree.map(
+        lambda ps, gs, l: _scatter_dim(ps, gs, len(l.shape)),
+        p_specs, g_specs, stage_params, is_leaf=is_p)
 
     plan = sch.stash_plan(sched)
 
@@ -234,11 +291,28 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         loss = lax.psum(loss_acc, axis_name) * inv_m
         in_grads = lax.psum(in_grads, axis_name)
         head_dw = lax.psum(head_dw, axis_name)
+        if tensor_axis is not None and sequence_parallel:
+            # sequence-parallel stages see only their sequence shard, so
+            # grads of model-replicated leaves (norm scales) are partial
+            dw = jax.tree.map(
+                lambda t_, sharded: t_ if sharded
+                else lax.psum(t_, tensor_axis),
+                dw, model_sharded)
         if d_axis is not None:
             # each data shard computed the mean loss over its slice; the
             # global loss is the mean of shard means, so params average
             # over 'data' and the (still-sharded) input cotangents scale
-            dw = lax.pmean(dw, d_axis)
+            if zero2:
+                inv_d = 1.0 / d_size
+                def _reduce(t_, dim):
+                    if dim >= 1:    # stacked dim i -> local dim i - 1
+                        return lax.psum_scatter(
+                            t_, d_axis, scatter_dimension=dim - 1,
+                            tiled=True) * inv_d
+                    return lax.pmean(t_, d_axis)
+                dw = jax.tree.map(_reduce, dw, scat_dims)
+            else:
+                dw = lax.pmean(dw, d_axis)
             head_dw = lax.pmean(head_dw, d_axis)
             loss = lax.pmean(loss, d_axis)
             in_grads = in_grads * (1.0 / d_size)
@@ -252,8 +326,8 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
     ys_in = ys if ys is not None else jnp.zeros((m_, 1), xs.dtype)
     outs, loss, stage_grads, head_grads, input_grads = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis_name), batch_spec, ys_spec, P()),
-        out_specs=(batch_spec, P(), P(axis_name), P(), batch_spec),
+        in_specs=(p_specs, batch_spec, ys_spec, P()),
+        out_specs=(batch_spec, P(), g_specs, P(), batch_spec),
         check_vma=False)(stage_params, xs, ys_in, head_params)
     return {"outs": outs, "loss": loss, "stage_grads": stage_grads,
             "head_grads": head_grads, "input_grads": input_grads,
@@ -285,8 +359,11 @@ def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
                          xs, ys, loss_fn: Callable, *, head_params=None,
                          axis_name: str = "stage",
                          data_axis: Optional[str] = None,
-                         capture_input_grads: bool = False
-                         ) -> Dict[str, Any]:
+                         capture_input_grads: bool = False,
+                         param_specs=None,
+                         tensor_axis: Optional[str] = None,
+                         sequence_parallel: bool = False,
+                         zero2: bool = False) -> Dict[str, Any]:
     """One pipelined forward+backward pass per the schedule table.
 
     Returns ``{'loss', 'stage_grads', 'head_grads', 'input_grads',
@@ -305,7 +382,9 @@ def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
     return run_schedule(sched, stage_fn, stage_params, xs, loss_fn=loss_fn,
                         ys=ys, head_params=head_params, axis_name=axis_name,
                         data_axis=data_axis,
-                        capture_input_grads=capture_input_grads)
+                        capture_input_grads=capture_input_grads,
+                        param_specs=param_specs, tensor_axis=tensor_axis,
+                        sequence_parallel=sequence_parallel, zero2=zero2)
 
 
 def sequential_reference(stage_fn: Callable, stage_params, xs):

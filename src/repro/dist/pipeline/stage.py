@@ -59,6 +59,57 @@ def check_pipeline_compatible(cfg: ModelConfig, num_stages: int) -> None:
                          + "; ".join(problems))
 
 
+def check_tensor_parallel_compatible(cfg: ModelConfig,
+                                     model_parallel: int) -> None:
+    """Tensor-sharded stages column/row-partition the attention and MLP
+    weights over ``model``, so the head counts and FFN width must divide
+    — and only dense GQA stacks have the explicit-collective path (MLA
+    normalizes a latent that would be column-sharded; recurrent mixers
+    carry cross-feature state)."""
+    if model_parallel <= 1:
+        return
+    problems = []
+    (unit, _count) = layer_groups(cfg)[0]
+    mixers = {m for m, _f in unit}
+    ffns = {f for _m, f in unit}
+    bad = sorted(mixers - {"attn", "local"})
+    if bad:
+        problems.append(f"mixer kinds {bad} have no tensor-parallel path")
+    if "moe" in ffns:
+        problems.append("MoE FFNs shard over the expert axis, not "
+                        "column/row")
+    for nm, v in (("num_heads", cfg.num_heads),
+                  ("num_kv_heads", cfg.num_kv_heads),
+                  ("d_ff", cfg.d_ff)):
+        if v % model_parallel:
+            problems.append(f"{nm}={v} not divisible by "
+                            f"model_parallel={model_parallel}")
+    if problems:
+        raise ValueError(f"{cfg.name}: not tensor-partitionable — "
+                         + "; ".join(problems))
+
+
+def stage_param_specs(stacked: Any, mesh=None, *, axis_name: str = "stage"):
+    """Per-leaf PartitionSpecs for stage-stacked params: the tensor-
+    parallel column/row rule applied to the *per-stage view* (the dims
+    after the leading stage axis), then the stage axis prepended on dim 0
+    — the stage→model composition order ``run_schedule``'s in_specs
+    need.  On meshes without a ``model`` axis this degrades to the old
+    ``P('stage')`` placement leaf-for-leaf."""
+    from repro.dist import sharding as shd
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+
+    def one(path, leaf):
+        inner = shd.param_leaf_spec(path, leaf.shape[1:], mesh=mesh)
+        entries = [axis_name] + list(inner)
+        while len(entries) > 1 and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, stacked)
+
+
 def layers_per_stage(cfg: ModelConfig, num_stages: int) -> int:
     l_ = total_layers(cfg)
     if l_ % num_stages:
@@ -87,18 +138,32 @@ def unstack_stage_grads(stage_grads, cfg: ModelConfig, num_stages: int
         stage_grads)]
 
 
-def make_stage_fn(cfg: ModelConfig) -> Callable:
+def make_stage_fn(cfg: ModelConfig, *, tp_axis: str = None,
+                  sequence_parallel: bool = False) -> Callable:
     """One pipeline stage: scan this stage's slice of decoder units.
 
     ``w`` is the per-stage gparams tree (``(count/S, ...)`` leaves), as
     handed out by the schedule runtime; ``x`` is ``(mb, seq, d_model)``.
+
+    ``tp_axis`` names the manual mesh axis the weights are column/row-
+    partitioned over: the layer math reduces its joins explicitly
+    (``models/layers.py`` tp/sp collectives).  With ``sequence_parallel``
+    the stage slices its (replicated) input over the sequence dim at the
+    inlet and gathers at the outlet, so boundary activations crossing
+    stages stay whole while the in-stage residual stream is sharded.
     """
     (unit, _count) = layer_groups(cfg)[0]
 
     def stage_fn(w, x):
         positions = jnp.arange(x.shape[1])
         aux = jnp.zeros((), jnp.float32)
-        x, _aux = lm.run_group_train(x, aux, w, unit, cfg, positions)
+        if tp_axis is not None and sequence_parallel:
+            x = L.sp_slice(x, tp_axis, 1)
+        x, _aux = lm.run_group_train(x, aux, w, unit, cfg, positions,
+                                     tp_axis=tp_axis,
+                                     sequence_parallel=sequence_parallel)
+        if tp_axis is not None and sequence_parallel:
+            x = L.sp_unslice(x, tp_axis, 1)
         return x
 
     return stage_fn

@@ -272,41 +272,115 @@ def _mesh_sizes(mesh) -> Dict[str, int]:
                     (int(d) for d in mesh.devices.shape)))
 
 
-def zero1_spec(spec: P, shape, mesh) -> P:
-    """ZeRO-1: additionally shard an optimizer-state leaf over the DP axes.
+def dp_partition_plan(spec: P, shape, mesh) -> Optional[Tuple[int, Tuple[str, ...]]]:
+    """The per-leaf ZeRO partition plan: ``(dim, dp_axes)`` or ``None``.
 
-    Among the not-yet-sharded dims divisible by the DP size, the *largest*
-    dim is chosen (not the first): sharding the biggest dim keeps every
-    shard's slice contiguous-ish and maximizes the memory saved per leaf —
-    e.g. a (heads, d_model, d_head) projection shards d_model, not heads.
-    Dims already claimed by another axis (tensor-parallel ``model``, the
-    pipeline ``stage`` leading dim) are left alone, so the rule composes
-    with :func:`pipeline_state_pspec`: per-stage moment slices shard over
-    ``data`` *within* their stage.
+    Picks the dim a leaf's optimizer moments (ZeRO-1) *and* gradients
+    (ZeRO-2) shard over the data-parallel axes — one plan for both, so
+    the elementwise moment update runs on matching local shards.  Dims
+    already claimed by another mesh axis (the pipeline ``stage`` leading
+    dim, tensor-parallel ``model`` columns/rows) are never candidates;
+    among the free dims the largest one the DP size divides wins (ties go
+    to the earlier dim).  When the full ``('pod', 'data')`` product
+    divides nothing, the plan retries with the outer ``pod`` axis dropped
+    before giving up, so odd-shaped leaves on multi-pod meshes still
+    shard over ``data`` alone.  ``None``: the leaf stays replicated (it
+    either already shards over a DP axis or no dim fits).
     """
     dp = [a for a in ("pod", "data") if a in mesh.axis_names]
     if not dp:
-        return spec
-    dp_size = 1
+        return None
     sizes = _mesh_sizes(mesh)
-    for a in dp:
-        dp_size *= sizes[a]
     entries = list(spec) + [None] * (len(shape) - len(spec))
     used = {a for e in entries if e is not None
             for a in (e if isinstance(e, tuple) else (e,))}
     if used & set(dp):
+        return None
+    free = [(i, d) for i, (e, d) in enumerate(zip(entries, shape))
+            if e is None]
+    for drop in range(len(dp)):
+        axes = tuple(dp[drop:])
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if n <= 1:
+            continue
+        best_i, best_dim = None, 0
+        for i, d in free:
+            if d % n == 0 and d >= n and d > best_dim:
+                best_i, best_dim = i, d
+        if best_i is not None:
+            return best_i, axes
+    return None
+
+
+def _apply_plan(spec: P, shape, plan) -> P:
+    if plan is None:
         return spec
-    best_i, best_dim = None, 0
-    for i, (e, dim) in enumerate(zip(entries, shape)):
-        if e is None and dim % dp_size == 0 and dim >= dp_size \
-                and dim > best_dim:
-            best_i, best_dim = i, dim
-    if best_i is None:
-        return spec
-    entries[best_i] = tuple(dp) if len(dp) > 1 else dp[0]
+    i, axes = plan
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    entries[i] = axes if len(axes) > 1 else axes[0]
     while entries and entries[-1] is None:
         entries.pop()
     return P(*entries)
+
+
+def zero1_spec(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard an optimizer-state leaf over the DP axes
+    on the dim :func:`dp_partition_plan` picks.  Composes with
+    :func:`pipeline_state_pspec`: the ``stage`` rule claims the leading
+    layer dim first, tensor-parallel ``model`` claims a column/row dim,
+    and the moments shard over ``data`` on whatever large dim remains."""
+    return _apply_plan(spec, shape, dp_partition_plan(spec, shape, mesh))
+
+
+def zero2_spec(spec: P, shape, mesh) -> P:
+    """ZeRO-2: gradients shard over the DP axes exactly like the ZeRO-1
+    moments — same :func:`dp_partition_plan`, so the pipeline runtime can
+    reduce-scatter each stage-grad leaf straight into the layout its
+    moment update consumes (no resharding between grad and moment)."""
+    return zero1_spec(spec, shape, mesh)
+
+
+def param_leaf_spec(path, shape, mesh=None) -> P:
+    """The tensor-parallel column/row rule for one param leaf, addressed
+    by tree path + bare shape (no array needed) — what the pipeline stage
+    partitioner uses to spec the per-stage view of a stacked leaf."""
+    if mesh is None:
+        mesh = _ambient_mesh()
+    view = type("_Shape", (), {"shape": tuple(shape)})()
+    return _param_spec(path, view, mesh)
+
+
+def sharded_state_bytes(state_shapes: Any, specs: Any, mesh) -> int:
+    """Total per-device bytes of a state tree under its PartitionSpecs:
+    each leaf's byte size divided by the product of the mesh-axis sizes
+    its spec consumes.  This is the acceptance check for ZeRO / tensor
+    layouts — e.g. the stage-stacked params of a ``(stage, data, model)``
+    mesh shrink by ~``stage * model`` versus replicated placement, and
+    ZeRO moments by another factor of ``data``."""
+    sizes = _mesh_sizes(mesh)
+    total = 0
+
+    def leaf_bytes(spec, leaf):
+        nonlocal total
+        n = 1
+        for e in list(spec):
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                n *= sizes.get(a, 1)
+        elems = 1
+        for d in getattr(leaf, "shape", ()):
+            elems *= int(d)
+        dt = getattr(leaf, "dtype", None)
+        item = dt.itemsize if dt is not None else 4
+        total += (elems * item) // n
+        return spec
+
+    jax.tree.map(leaf_bytes, specs, state_shapes,
+                 is_leaf=lambda x: isinstance(x, P))
+    return total
 
 
 def state_pspec(state_shapes: Any, mesh=None, *, zero1: bool = False):

@@ -73,17 +73,31 @@ def _grad_fn(cfg: ModelConfig, depth: Optional[int]):
 
 
 def _finish_step(state: State, grads, metrics, tcfg: TrainConfig,
-                 cfg: ModelConfig, spb_cfg: Optional[SPBConfig]
-                 ) -> Tuple[State, Dict[str, jax.Array]]:
+                 cfg: ModelConfig, spb_cfg: Optional[SPBConfig],
+                 grad_specs=None) -> Tuple[State, Dict[str, jax.Array]]:
     if tcfg.compression != "none":
         key = jax.random.fold_in(jax.random.key(tcfg.seed), state["step"])
         grads = compress.compress_tree(grads, tcfg.compression,
                                        tcfg.compression_ratio, key)
     params, opt, opt_metrics = optimizers.apply_updates(
         state["params"], grads, state["opt"], state["step"], tcfg,
-        cfg=cfg, spb_cfg=spb_cfg)
+        cfg=cfg, spb_cfg=spb_cfg, grad_specs=grad_specs)
     new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
     return new_state, {**metrics, **opt_metrics}
+
+
+def _pipeline_grad_specs(grads, mesh, zero2: bool):
+    """Layout constraint for a pipeline step's gradient tree: the same
+    stage(+model) placement as the params; with ``zero2`` each leaf is
+    additionally data-sharded on its :func:`~repro.dist.sharding.
+    dp_partition_plan` dim — exactly the specs the ZeRO-1 moments use, so
+    the optimizer's elementwise update runs shard-local end to end."""
+    fake = {"params": grads, "opt": {}, "step": 0}
+    gs = shd.pipeline_state_pspec(fake, mesh=mesh)["params"]
+    if zero2:
+        gs = jax.tree.map(lambda s, l: shd.zero2_spec(s, l.shape, mesh),
+                          gs, grads, is_leaf=lambda x: isinstance(x, P))
+    return gs
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
@@ -247,7 +261,10 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                              spb_cfg: Optional[SPBConfig] = None, *,
                              num_stages: int, depth: Optional[int] = None,
                              schedule: str = "1f1b",
-                             axis_name: str = "stage") -> Callable:
+                             axis_name: str = "stage",
+                             tensor_parallel: int = 1,
+                             sequence_parallel: bool = False,
+                             zero2: bool = False) -> Callable:
     """A (state, batch) -> (state, metrics) step that runs the layer stack
     as a pipeline over the mesh's ``axis_name`` axis.
 
@@ -265,16 +282,30 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     ``microbatches * data_size``) and data-averages gradients; the
     activation/cotangent stashes are ring buffers sized to the table's
     ``stash_plan`` watermark, not the microbatch count.
+
+    ``tensor_parallel > 1`` (3-D ``(stage, data, model)`` meshes) column/
+    row-shards the stage weights over ``model`` with explicit join
+    collectives inside the stage (``sequence_parallel`` additionally
+    shards the in-stage residual stream over ``model`` on the sequence
+    dim); ``zero2`` reduce-scatters stage grads over ``data`` into the
+    ZeRO-1 moments' layout and pins that layout through the optimizer.
     """
     from repro.config import depth_to_bwd_stages
     from repro.dist import pipeline as pp
 
     pp.stage.check_pipeline_compatible(cfg, num_stages)
+    tp = int(tensor_parallel) if tensor_parallel else 1
+    if tp > 1:
+        pp.stage.check_tensor_parallel_compatible(cfg, tp)
+    if sequence_parallel and tp <= 1:
+        raise ValueError("sequence_parallel requires tensor_parallel > 1")
+    tp_axis = "model" if tp > 1 else None
     m = max(1, tcfg.microbatches)
     bwd_stages = depth_to_bwd_stages(cfg, depth, num_stages)
     sched = pp.schedules.build(schedule, num_stages, m,
                                bwd_stages=bwd_stages)
-    stage_fn = pp.stage.make_stage_fn(cfg)
+    stage_fn = pp.stage.make_stage_fn(cfg, tp_axis=tp_axis,
+                                      sequence_parallel=sequence_parallel)
     head_loss = pp.stage.make_head_loss(cfg)
     embed_live = bwd_stages == num_stages   # stage 0 backprops -> so does
                                             # the embedding lookup
@@ -286,6 +317,15 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         if b % m:
             raise ValueError(f"batch size {b} not divisible by {m} "
                              f"microbatches")
+        mesh = jax.sharding.get_abstract_mesh()
+        if tp > 1:
+            msize = int(dict(mesh.shape).get("model", 1))
+            if msize != tp:
+                raise ValueError(f"tensor_parallel={tp} but the mesh's "
+                                 f"model axis has size {msize}")
+            if sequence_parallel and tokens.shape[1] % tp:
+                raise ValueError(f"sequence length {tokens.shape[1]} not "
+                                 f"divisible by tensor_parallel={tp}")
 
         def embed_fn(ep):
             return pp.stage.embed_tokens(ep, tokens, cfg)
@@ -298,10 +338,15 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         ys = labels.reshape((m, b // m) + labels.shape[1:])
         stacked = pp.stage.stack_stage_params(params["groups"], cfg,
                                               num_stages)
+        pspecs = (pp.stage.stage_param_specs(stacked, mesh=mesh,
+                                             axis_name=axis_name)
+                  if tp > 1 else None)
         res = pp.runtime.pipeline_train_grads(
             sched, stage_fn, stacked, xs, ys, head_loss,
             head_params=pp.stage.head_params_of(params),
-            axis_name=axis_name, capture_input_grads=embed_live)
+            axis_name=axis_name, capture_input_grads=embed_live,
+            param_specs=pspecs, tensor_axis=tp_axis,
+            sequence_parallel=sequence_parallel, zero2=zero2)
 
         head_grads = res["head_grads"]
         d_embed = head_grads["embed"]          # tied unembedding path
@@ -317,30 +362,35 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         }
         metrics = {"loss": res["loss"], "xent": res["loss"],
                    "moe_aux": jnp.zeros((), jnp.float32)}
-        return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg)
+        gspecs = (_pipeline_grad_specs(grads, mesh, zero2)
+                  if (tp > 1 or zero2) else None)
+        return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg,
+                            grad_specs=gspecs)
 
     return step
 
 
 def build_pipeline_train_steps(cfg: ModelConfig, tcfg: TrainConfig,
                                spb_cfg: SPBConfig, *, num_stages: int,
-                               schedule: str = "1f1b"
-                               ) -> Dict[Any, Callable]:
+                               schedule: str = "1f1b",
+                               tensor_parallel: int = 1,
+                               sequence_parallel: bool = False,
+                               zero2: bool = False) -> Dict[Any, Callable]:
     """Per-depth pipeline step table: ``None`` (full backprop) plus, for
     temporal SPB, one entry per distinct stage-snapped cycle depth."""
     if spb_cfg.mode in ("spatial", "temporal-mb"):
         raise ValueError(f"SPB mode {spb_cfg.mode!r} is not supported "
                          f"under pipeline parallelism (use 'temporal' "
                          f"or 'off')")
+    kw = dict(num_stages=num_stages, schedule=schedule,
+              tensor_parallel=tensor_parallel,
+              sequence_parallel=sequence_parallel, zero2=zero2)
     steps: Dict[Any, Callable] = {
-        None: make_pipeline_train_step(cfg, tcfg, spb_cfg,
-                                       num_stages=num_stages,
-                                       schedule=schedule)}
+        None: make_pipeline_train_step(cfg, tcfg, spb_cfg, **kw)}
     if spb_cfg.mode == "temporal":
         for d in sorted(set(spb_lib.snapped_depths(cfg, spb_cfg))):
-            steps[d] = make_pipeline_train_step(
-                cfg, tcfg, spb_cfg, num_stages=num_stages, depth=d,
-                schedule=schedule)
+            steps[d] = make_pipeline_train_step(cfg, tcfg, spb_cfg,
+                                                depth=d, **kw)
     return steps
 
 

@@ -75,11 +75,18 @@ class SPBEngine:
         engine.export_aot(cache_dir, specs)     # other processes import
 
     Pipeline sessions (``parallelism="pipeline"``) run the same surface
-    over a ``(stage, data)`` mesh from ``launch.mesh.make_pipeline_mesh``
-    — the engine stamps ``spb.pipeline_stages`` from the mesh so depth
-    policies emit stage-snapped depths, shards microbatches over ``data``
-    inside the schedule interpreter, and keys the AOT cache on the
-    ``(parallelism, schedule, data)`` extras on top of the mesh topology.
+    over a ``(stage, data[, model])`` mesh from ``launch.mesh.
+    make_pipeline_mesh`` — the engine stamps ``spb.pipeline_stages`` from
+    the mesh so depth policies emit stage-snapped depths, shards
+    microbatches over ``data`` inside the schedule interpreter, and keys
+    the AOT cache on the ``(parallelism, schedule, data, tensor, zero2)``
+    extras on top of the mesh topology.  ``tensor_parallel`` (default:
+    the mesh's model-axis size) column/row-shards stage weights over
+    ``model`` with explicit collectives at the joins; ``tensor_parallel=
+    1`` on a 3-D mesh is the replicated baseline.  ``sequence_parallel``
+    shards the in-stage residual stream over ``model`` on the sequence
+    dim; ``zero2`` reduce-scatters stage grads over ``data`` into the
+    ZeRO-1 moments' layout.
     """
 
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
@@ -88,6 +95,9 @@ class SPBEngine:
                  donate: bool = True, zero1: bool = True,
                  parallelism: str = "spmd",
                  pipeline_schedule: str = "1f1b",
+                 tensor_parallel: Optional[int] = None,
+                 sequence_parallel: bool = False,
+                 zero2: bool = False,
                  shared_cache: bool = True):
         if parallelism not in ("spmd", "pipeline"):
             raise ValueError(f"unknown parallelism {parallelism!r}; "
@@ -107,16 +117,40 @@ class SPBEngine:
                                  "'stage' axis (launch.mesh."
                                  "make_pipeline_mesh)")
             self.pipeline_stages = pcfg.num_pp
+            # tensor parallelism defaults to the mesh's model-axis size;
+            # an explicit tensor_parallel=1 on a 3-D mesh is the
+            # *replicated baseline* (the thing the HLO tests compare
+            # against), so a mismatch is only an error when sharding is on
+            msize = int(dict(zip(mesh.axis_names,
+                                 mesh.devices.shape)).get("model", 1))
+            self.tensor_parallel = (msize if tensor_parallel is None
+                                    else int(tensor_parallel))
+            if self.tensor_parallel > 1 and self.tensor_parallel != msize:
+                raise ValueError(
+                    f"tensor_parallel={self.tensor_parallel} but mesh "
+                    f"{tuple(mesh.axis_names)}={tuple(mesh.devices.shape)} "
+                    f"has model-axis size {msize}")
+            if sequence_parallel and self.tensor_parallel <= 1:
+                raise ValueError("sequence_parallel requires "
+                                 "tensor_parallel > 1")
+            self.sequence_parallel = bool(sequence_parallel)
+            self.zero2 = bool(zero2)
             # stage-snap the whole depth machinery (schedules, policies,
             # LR-rescale contributors) to what the pipeline can freeze
             if self.spb.pipeline_stages != self.pipeline_stages:
                 self.spb = dataclasses.replace(
                     self.spb, pipeline_stages=self.pipeline_stages)
         else:
+            if tensor_parallel not in (None, 1) or sequence_parallel or zero2:
+                raise ValueError("tensor_parallel / sequence_parallel / "
+                                 "zero2 are pipeline-session knobs")
             if mesh is None:
                 mesh = make_host_mesh()
             self.pipeline_stages = 0
             self.pipeline_data = 0
+            self.tensor_parallel = 0
+            self.sequence_parallel = False
+            self.zero2 = False
         self.donate = donate
         self.zero1 = zero1
         self.shared_cache = shared_cache
@@ -127,7 +161,10 @@ class SPBEngine:
             self._raw: Dict[Any, Callable] = \
                 steps_lib.build_pipeline_train_steps(
                     cfg, tcfg, self.spb, num_stages=self.pipeline_stages,
-                    schedule=pipeline_schedule)
+                    schedule=pipeline_schedule,
+                    tensor_parallel=self.tensor_parallel,
+                    sequence_parallel=self.sequence_parallel,
+                    zero2=self.zero2)
         else:
             self._raw = steps_lib.build_spb_train_steps(cfg, tcfg, self.spb)
 
@@ -202,7 +239,10 @@ class SPBEngine:
                 self._raw[key] = steps_lib.make_pipeline_train_step(
                     self.cfg, self.tcfg, self.spb, depth=key,
                     num_stages=self.pipeline_stages,
-                    schedule=self.pipeline_schedule)
+                    schedule=self.pipeline_schedule,
+                    tensor_parallel=self.tensor_parallel,
+                    sequence_parallel=self.sequence_parallel,
+                    zero2=self.zero2)
             else:
                 self._raw[key] = steps_lib.make_train_step(
                     self.cfg, self.tcfg, self.spb, depth=key)
@@ -225,6 +265,9 @@ class SPBEngine:
         ident["parallelism"] = self.parallelism
         if self.parallelism == "pipeline":
             ident["pipeline_schedule"] = self.pipeline_schedule
+            ident["tensor_parallel"] = self.tensor_parallel
+            ident["sequence_parallel"] = self.sequence_parallel
+            ident["zero2"] = self.zero2
         blob = json.dumps(ident, sort_keys=True, default=str).encode()
         return hashlib.sha256(blob).hexdigest()[:16]
 
@@ -281,6 +324,13 @@ class SPBEngine:
                     f"pipeline session with {self.pipeline_stages} stages "
                     f"cannot resize onto mesh {tuple(mesh.axis_names)}="
                     f"{tuple(mesh.devices.shape)}")
+            msize = int(dict(zip(mesh.axis_names,
+                                 mesh.devices.shape)).get("model", 1))
+            if self.tensor_parallel > 1 and msize != self.tensor_parallel:
+                raise ValueError(
+                    f"tensor-sharded session (tensor_parallel="
+                    f"{self.tensor_parallel}) cannot resize onto a mesh "
+                    f"with model-axis size {msize}")
         self._bind_mesh(mesh)
         self._steps = {}
         self._compiled = {}
@@ -395,7 +445,10 @@ class SPBEngine:
         if self.parallelism != "spmd":
             extra.update(parallelism=self.parallelism,
                          pipeline_schedule=self.pipeline_schedule,
-                         pipeline_data=self.pipeline_data)
+                         pipeline_data=self.pipeline_data,
+                         tensor_parallel=self.tensor_parallel,
+                         sequence_parallel=self.sequence_parallel,
+                         zero2=self.zero2)
         if self.mesh.devices.size != jax.device_count():
             # a proper submesh: the executable is pinned to concrete
             # devices, so spatially co-located engines on *different*

@@ -33,11 +33,15 @@ from repro.launch.mesh import make_host_mesh, make_pipeline_mesh
 def build_engine(cfg, tcfg, spb_cfg, mesh, *, depth_policy: str = "cycle",
                  time_budget: float = 0.75, donate: bool = True,
                  parallelism: str = "spmd",
-                 pipeline_schedule: str = "1f1b") -> SPBEngine:
+                 pipeline_schedule: str = "1f1b",
+                 tensor_parallel=None, sequence_parallel: bool = False,
+                 zero2: bool = False) -> SPBEngine:
     """The one construction path every entry point shares."""
     engine = SPBEngine(cfg, tcfg, spb_cfg, mesh=mesh, donate=donate,
                        parallelism=parallelism,
-                       pipeline_schedule=pipeline_schedule)
+                       pipeline_schedule=pipeline_schedule,
+                       tensor_parallel=tensor_parallel,
+                       sequence_parallel=sequence_parallel, zero2=zero2)
     # build the policy against engine.spb, which the engine has stamped
     # with the mesh's pipeline stage count (stage-snapped depth cycles)
     engine.policy = make_policy(depth_policy, cfg, engine.spb,
@@ -73,7 +77,18 @@ def train(argv=None):
                     help="size of the pipeline mesh's 'data' axis: "
                          "microbatches shard their batch dim over it and "
                          "per-stage optimizer moments ZeRO-1-shard over it "
-                         "(total devices = stages x data)")
+                         "(total devices = stages x data x model)")
+    ap.add_argument("--tensor-parallel", type=int, default=1,
+                    help="size of the pipeline mesh's 'model' axis: stage "
+                         "weights column/row-shard over it with explicit "
+                         "collectives at the attention/MLP joins")
+    ap.add_argument("--sequence-parallel", action="store_true",
+                    help="with --tensor-parallel > 1: shard the in-stage "
+                         "residual stream over 'model' on the sequence dim "
+                         "(all-gather/reduce-scatter at the joins)")
+    ap.add_argument("--zero2", action="store_true",
+                    help="reduce-scatter pipeline stage grads over 'data' "
+                         "into the ZeRO-1 moments' layout")
     ap.add_argument("--depth-policy", default="cycle",
                     choices=["cycle", "costmodel", "hook"],
                     help="who picks the per-step backprop depth")
@@ -117,7 +132,8 @@ def train(argv=None):
                         warmup_steps=args.spb_warmup)
     if args.parallelism == "pipeline":
         mesh = make_pipeline_mesh(args.pipeline_stages or None,
-                                  data_parallel=args.pipeline_data_parallel)
+                                  data_parallel=args.pipeline_data_parallel,
+                                  model_parallel=args.tensor_parallel)
     else:
         mesh = make_host_mesh()
     mgr = (CheckpointManager(tcfg.checkpoint_dir, keep=3)
@@ -151,7 +167,12 @@ def _run(cfg, tcfg, spb_cfg, mesh, args, mgr, history):
                           time_budget=args.time_budget,
                           donate=not args.no_donate,
                           parallelism=args.parallelism,
-                          pipeline_schedule=args.pipeline_schedule)
+                          pipeline_schedule=args.pipeline_schedule,
+                          tensor_parallel=(args.tensor_parallel
+                                           if args.parallelism == "pipeline"
+                                           else None),
+                          sequence_parallel=args.sequence_parallel,
+                          zero2=args.zero2)
     engine.init_state(jax.random.key(tcfg.seed))
     start_step = 0
     if args.resume and mgr and mgr.latest_step() is not None:

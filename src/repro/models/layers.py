@@ -253,6 +253,140 @@ def decode_attention(q: Array, k: Array, v: Array, kpos: Array, qpos: Array,
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel collectives (Megatron f/g + sequence-parallel transitions)
+# ---------------------------------------------------------------------------
+# Inside the pipeline interpreter's shard_map the 'model' axis is manual:
+# column/row-partitioned weights produce partial sums that must be reduced
+# explicitly.  Each helper is a custom_vjp pairing one forward collective
+# with its exact adjoint, so the backward pass emits the mirrored
+# collective instead of whatever autodiff-of-psum would synthesize under
+# check_vma=False (where jax cannot track which values are replicated).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_psum(x: Array, axis: str) -> Array:
+    """All-reduce partial outputs at a row-parallel join (Megatron 'g'):
+    forward psum; backward identity — the output cotangent is already
+    replicated over the axis."""
+    return lax.psum(x, axis)
+
+
+def _tp_psum_fwd(x, axis):
+    return lax.psum(x, axis), None
+
+
+def _tp_psum_bwd(axis, _, g):
+    return (g,)
+
+
+tp_psum.defvjp(_tp_psum_fwd, _tp_psum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_enter(x: Array, axis: str) -> Array:
+    """Enter a column-parallel region (Megatron 'f'): forward identity;
+    backward all-reduce — every shard consumed the same replicated input,
+    so each shard's input cotangent is a partial sum."""
+    return x
+
+
+def _tp_enter_fwd(x, axis):
+    return x, None
+
+
+def _tp_enter_bwd(axis, _, g):
+    return (lax.psum(g, axis),)
+
+
+tp_enter.defvjp(_tp_enter_fwd, _tp_enter_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def sp_all_gather(x: Array, axis: str, dim: int) -> Array:
+    """Sequence-parallel block entry: gather the sequence shards before
+    the column matmuls; the adjoint reduce-scatters cotangents back to
+    their owning shard (summing the partial contributions en route)."""
+    return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _sp_all_gather_fwd(x, axis, dim):
+    return lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _sp_all_gather_bwd(axis, dim, _, g):
+    return (lax.psum_scatter(g, axis, scatter_dimension=dim, tiled=True),)
+
+
+sp_all_gather.defvjp(_sp_all_gather_fwd, _sp_all_gather_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def sp_reduce_scatter(x: Array, axis: str, dim: int) -> Array:
+    """Sequence-parallel block exit: reduce the row-parallel partial sums
+    AND slice the sequence back to this shard in one collective (same
+    wire bytes as the tp_psum it replaces — the win is the sharded
+    residual stream, not traffic); the adjoint all-gathers."""
+    return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def _sp_reduce_scatter_fwd(x, axis, dim):
+    return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True), None
+
+
+def _sp_reduce_scatter_bwd(axis, dim, _, g):
+    return (lax.all_gather(g, axis, axis=dim, tiled=True),)
+
+
+sp_reduce_scatter.defvjp(_sp_reduce_scatter_fwd, _sp_reduce_scatter_bwd)
+
+
+def _sp_slice_impl(x: Array, axis: str, dim: int) -> Array:
+    n = lax.axis_size(axis)
+    size = x.shape[dim] // n
+    return lax.dynamic_slice_in_dim(x, lax.axis_index(axis) * size, size,
+                                    axis=dim)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def sp_slice(x: Array, axis: str, dim: int) -> Array:
+    """Stage inlet under sequence parallelism: take this shard's slice of
+    the replicated stage input.  The adjoint all-gathers the per-shard
+    cotangents — each position is owned by exactly one shard, so the
+    gather reassembles (not sums) the full input cotangent."""
+    return _sp_slice_impl(x, axis, dim)
+
+
+def _sp_slice_fwd(x, axis, dim):
+    return _sp_slice_impl(x, axis, dim), None
+
+
+def _sp_slice_bwd(axis, dim, _, g):
+    return (lax.all_gather(g, axis, axis=dim, tiled=True),)
+
+
+sp_slice.defvjp(_sp_slice_fwd, _sp_slice_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def sp_unslice(x: Array, axis: str, dim: int) -> Array:
+    """Stage outlet under sequence parallelism: all-gather the sequence
+    shards so the boundary activation crossing to the next stage is whole
+    and replicated (ppermute exchanges and the head see the full batch);
+    the adjoint takes this shard's slice of the incoming cotangent."""
+    return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _sp_unslice_fwd(x, axis, dim):
+    return lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _sp_unslice_bwd(axis, dim, _, g):
+    return (_sp_slice_impl(g, axis, dim),)
+
+
+sp_unslice.defvjp(_sp_unslice_fwd, _sp_unslice_bwd)
+
+
+# ---------------------------------------------------------------------------
 # GQA attention layer (kinds 'attn' and 'local')
 # ---------------------------------------------------------------------------
 
@@ -288,10 +422,22 @@ def _pallas_attention(q: Array, k: Array, v: Array, *, causal: bool,
 
 
 def attention_fwd(p: Params, x: Array, cfg: ModelConfig, *, kind: str,
-                  positions: Array) -> Array:
-    """Train/prefill self-attention.  x: (B, S, D)."""
+                  positions: Array, tp_axis: Optional[str] = None,
+                  sequence_parallel: bool = False) -> Array:
+    """Train/prefill self-attention.  x: (B, S, D).
+
+    ``tp_axis`` names a manual mesh axis over which wq/wk/wv are column-
+    and wo row-partitioned (tensor-sharded pipeline stages): head counts
+    derive from the *local* weight shapes and the output join all-reduces
+    explicitly via :func:`tp_psum`.  ``sequence_parallel`` swaps the
+    enter/join pair for all-gather / reduce-scatter over the sequence
+    dim, so the residual stream between joins stays sequence-sharded."""
+    if tp_axis is not None:
+        x = (sp_all_gather(x, tp_axis, 1) if sequence_parallel
+             else tp_enter(x, tp_axis))
     B, S, D = x.shape
-    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Dh = cfg.head_dim
+    H, K = p["wq"].shape[-1] // Dh, p["wk"].shape[-1] // Dh
     q = (x @ p["wq"]).reshape(B, S, H, Dh)
     k = (x @ p["wk"]).reshape(B, S, K, Dh)
     v = (x @ p["wv"]).reshape(B, S, K, Dh)
@@ -305,7 +451,11 @@ def attention_fwd(p: Params, x: Array, cfg: ModelConfig, *, kind: str,
         o = blockwise_attention(q, k, v, causal=True, window=window,
                                 q_block=cfg.attn_q_block,
                                 kv_block=cfg.attn_kv_block)
-    return o.reshape(B, S, H * Dh) @ p["wo"]
+    o = o.reshape(B, S, H * Dh) @ p["wo"]
+    if tp_axis is not None:
+        o = (sp_reduce_scatter(o, tp_axis, 1) if sequence_parallel
+             else tp_psum(o, tp_axis))
+    return o
 
 
 def attention_prefill(p: Params, x: Array, cfg: ModelConfig, *, kind: str,
@@ -665,8 +815,19 @@ def init_ffn(key, d_model: int, d_ff: int, dtype) -> Params:
     }
 
 
-def ffn_fwd(p: Params, x: Array) -> Array:
-    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+def ffn_fwd(p: Params, x: Array, *, tp_axis: Optional[str] = None,
+            sequence_parallel: bool = False) -> Array:
+    """SwiGLU MLP; ``tp_axis``: wg/wu column- and wd row-partitioned over
+    a manual mesh axis, with the same enter/join collectives as
+    :func:`attention_fwd`."""
+    if tp_axis is not None:
+        x = (sp_all_gather(x, tp_axis, 1) if sequence_parallel
+             else tp_enter(x, tp_axis))
+    y = (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if tp_axis is not None:
+        y = (sp_reduce_scatter(y, tp_axis, 1) if sequence_parallel
+             else tp_psum(y, tp_axis))
+    return y
 
 
 # ---------------------------------------------------------------------------

@@ -124,7 +124,7 @@ def param_shapes(cfg: ModelConfig):
 def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
                  positions=None, pos=None, cache=None, enc=None,
                  causal=True, page_table=None, active=None,
-                 valid_len=None):
+                 valid_len=None, tp_axis=None, sequence_parallel=False):
     """Returns (x, aux, new_cache).
 
     Modes: 'train' | 'prefill' | 'decode' (dense per-slot caches), plus
@@ -132,8 +132,18 @@ def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
     ``page_table`` is that slot's page row, ``valid_len`` the unpadded
     prompt length) and 'serve_decode' (slot-batched, ``page_table`` is
     the full (N, Pmax) block table, ``active`` the slot liveness mask).
+
+    ``tp_axis`` (train only): manual mesh axis the attention/MLP weights
+    are column/row-partitioned over — the tensor-sharded pipeline stage
+    path; ``sequence_parallel`` shards the residual stream between the
+    joins over that axis on the sequence dim.
     """
     mixer, ffn = kinds
+    if tp_axis is not None and (mixer not in ("attn", "local")
+                                or ffn == "moe" or mode != "train"):
+        raise NotImplementedError(
+            f"tensor-parallel path covers dense attn/local train layers "
+            f"only, got mixer={mixer!r} ffn={ffn!r} mode={mode!r}")
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
     h = L.rms_norm(x, up["ln1"], cfg.norm_eps)
@@ -156,7 +166,8 @@ def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
         elif mode == "train":
             if causal:
                 o = L.attention_fwd(up["mixer"], h, cfg, kind=kind,
-                                    positions=positions)
+                                    positions=positions, tp_axis=tp_axis,
+                                    sequence_parallel=sequence_parallel)
             else:   # bidirectional encoder: full attention, no mask
                 B, S_, _ = h.shape
                 H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -248,7 +259,8 @@ def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
             fo, aux = M.moe_fwd(up["ffn"], h2, cfg, ep_axis="model",
                                 dp_spec=dp_spec)
         else:
-            fo = L.ffn_fwd(up["ffn"], h2)
+            fo = L.ffn_fwd(up["ffn"], h2, tp_axis=tp_axis,
+                           sequence_parallel=sequence_parallel)
         x = x + fo
     x = shard(x, "batch", "seq", "embed")
     return x, aux, new_cache
@@ -259,13 +271,14 @@ def _apply_layer(x, up, kinds, cfg: ModelConfig, *, mode: str,
 # ---------------------------------------------------------------------------
 
 def _run_group_train(x, aux, gparams, unit, cfg, positions, *, enc=None,
-                     causal=True):
+                     causal=True, tp_axis=None, sequence_parallel=False):
     def body(carry, up):
         xx, aa = carry
         for u in range(len(unit)):
             xx, a_u, _ = _apply_layer(xx, up[u], unit[u], cfg, mode="train",
                                       positions=positions, enc=enc,
-                                      causal=causal)
+                                      causal=causal, tp_axis=tp_axis,
+                                      sequence_parallel=sequence_parallel)
             aa = aa + a_u
         return (xx, aa), None
 

@@ -59,9 +59,26 @@ def global_norm(tree) -> Array:
 
 def apply_updates(params, grads, opt_state, step: Array, tcfg: TrainConfig,
                   cfg: Optional[ModelConfig] = None,
-                  spb_cfg: Optional[SPBConfig] = None
+                  spb_cfg: Optional[SPBConfig] = None,
+                  grad_specs=None
                   ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
-    """One optimizer step.  Returns (params, opt_state, metrics)."""
+    """One optimizer step.  Returns (params, opt_state, metrics).
+
+    ``grad_specs`` (ZeRO-2): per-leaf PartitionSpecs pinning the sharded
+    gradient layout through clipping/scaling, so the elementwise moment
+    updates stay shard-local instead of XLA re-gathering grads at first
+    use.  The specs must match the moments' ZeRO-1 layout (both come
+    from ``sharding.dp_partition_plan``); the math below is unchanged —
+    global sums over sharded arrays are exact under SPMD.
+    """
+    if grad_specs is not None:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not getattr(mesh, "empty", True):
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(mesh, s)),
+                grads, grad_specs,
+                is_leaf=lambda x: hasattr(x, "shape"))
     gnorm = global_norm(grads)
     if tcfg.grad_clip > 0:
         scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))

@@ -141,3 +141,100 @@ def test_pipeline_state_pspec_without_zero1_keeps_data_free():
     for tree in (specs["params"], specs["opt"]):
         for s in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)):
             assert "data" not in tuple(s)
+
+
+# ---------------------------------------------------------------------------
+# 3-D (stage, data, model) composition: dp_partition_plan / ZeRO-2
+# ---------------------------------------------------------------------------
+
+_MESH3D = jax.sharding.AbstractMesh(
+    (("stage", 2), ("data", 2), ("model", 2)))
+
+
+def test_dp_partition_plan_skips_claimed_dims():
+    """The plan never lands on a dim stage/model already claimed, even
+    when that dim is the largest divisible one."""
+    # dim2 largest but on 'model'; dim0 on 'stage' -> dim1 wins
+    assert shd.dp_partition_plan(P("stage", None, "model"),
+                                 (4, 64, 128), _MESH3D) == (1, ("data",))
+    # every free dim indivisible -> no plan
+    assert shd.dp_partition_plan(P("stage", None, "model"),
+                                 (4, 3, 128), _MESH3D) is None
+    # spec already touching a dp axis -> leave alone
+    assert shd.dp_partition_plan(P("stage", "data"),
+                                 (4, 64, 128), _MESH3D) is None
+
+
+def test_zero2_spec_matches_zero1_plan():
+    """ZeRO-2 grads shard exactly like the ZeRO-1 moments — same plan,
+    same dim — so the optimizer's elementwise update is shard-local."""
+    for spec, shape in [(P("stage", None, None, "model"), (2, 2, 64, 32)),
+                        (P("stage", None, "model"), (2, 128, 64)),
+                        (P("stage",), (2, 2, 64)),
+                        (P(), (512, 64))]:
+        assert shd.zero2_spec(spec, shape, _MESH3D) == \
+            shd.zero1_spec(spec, shape, _MESH3D)
+
+
+def test_zero1_composes_with_model_on_3d_mesh():
+    """Stage claims dim0, the tensor-parallel column rule claims the last
+    dim, and ZeRO-1 shards the moments over 'data' on the largest dim
+    left — the full stage -> model -> ZeRO composition order."""
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig(optimizer="adamw")
+    shapes = steps_lib.train_state_shapes(cfg, tcfg)
+    specs = shd.pipeline_state_pspec(shapes, mesh=_MESH3D, zero1=True)
+    # wq: (count=4, d_model=64, q_dim=64) -> stage, data, model
+    assert specs["params"]["groups"][0][0]["mixer"]["wq"] == \
+        P("stage", None, "model")
+    assert specs["opt"]["mu"]["groups"][0][0]["mixer"]["wq"] == \
+        P("stage", "data", "model")
+    # row-parallel wo: model on the second-to-last dim
+    assert specs["params"]["groups"][0][0]["mixer"]["wo"] == \
+        P("stage", "model")
+    assert specs["opt"]["mu"]["groups"][0][0]["mixer"]["wo"] == \
+        P("stage", "model", "data")
+    # norm scales: (4, 64) -> stage + data, nothing for model to claim
+    assert specs["opt"]["mu"]["groups"][0][0]["ln1"] == P("stage", "data")
+
+
+def test_param_leaf_spec_matches_param_spec_on_views():
+    """stage_param_specs specs the per-stage view (shape[1:]) of each
+    stacked leaf; param_leaf_spec must agree with the full-tree rule."""
+    cfg = reduced_config("yi-6b")
+    shapes = steps_lib.train_state_shapes(cfg, TrainConfig())
+
+    def check(path, leaf):
+        want = shd.params_pspec(shapes["params"], mesh=_MESH3D)
+        got = shd.param_leaf_spec(path, leaf.shape, mesh=_MESH3D)
+        node = want
+        for p_ in path:
+            node = node[getattr(p_, "key", getattr(p_, "idx", p_))]
+        assert got == node, (path, got, node)
+
+    jax.tree_util.tree_map_with_path(check, shapes["params"])
+
+
+def test_sharded_state_bytes_shrink_by_mesh_factors():
+    """Acceptance pin: per-device state bytes on the 3-D mesh shrink by
+    ~model for the column/row-sharded leaves (and by data for moments)
+    versus the same state on a (stage, data) mesh."""
+    cfg = reduced_config("yi-6b")
+    tcfg = TrainConfig(optimizer="adamw")
+    shapes = steps_lib.train_state_shapes(cfg, tcfg)
+    mesh2d = jax.sharding.AbstractMesh((("stage", 2), ("data", 2)))
+    b3 = shd.sharded_state_bytes(
+        shapes, shd.pipeline_state_pspec(shapes, mesh=_MESH3D, zero1=True),
+        _MESH3D)
+    b2 = shd.sharded_state_bytes(
+        shapes, shd.pipeline_state_pspec(shapes, mesh=mesh2d, zero1=True),
+        mesh2d)
+    assert b3 < b2
+    # the stage-stacked params alone shrink by exactly stage * model for
+    # the matrix leaves; norm scales only see the stage factor
+    p3 = shd.pipeline_state_pspec(shapes, mesh=_MESH3D)["params"]["groups"]
+    g3 = shd.sharded_state_bytes(shapes["params"]["groups"], p3, _MESH3D)
+    repl = jax.tree.map(lambda s: P(), p3,
+                        is_leaf=lambda x: isinstance(x, P))
+    g0 = shd.sharded_state_bytes(shapes["params"]["groups"], repl, _MESH3D)
+    assert g0 / g3 > 3.5        # ~stage(2) * model(2) minus the scales
