@@ -284,7 +284,12 @@ def pipeline_tp_collective_bytes(cfg: ModelConfig, microbatch: int,
                          f"data_parallel={data_parallel}")
     elem = 2 if cfg.dtype in ("bfloat16", "float16") else 4
     act = (microbatch // data_parallel) * seq_len * cfg.d_model * elem
-    layers_per_stage = max(1, cfg.num_layers // max(num_stages, 1))
+    try:
+        from repro.config import stage_layer_counts
+        # heterogeneous stage maps: the busiest stage bounds the wire
+        layers_per_stage = max(1, max(stage_layer_counts(cfg, num_stages)))
+    except (ValueError, ImportError):
+        layers_per_stage = max(1, cfg.num_layers // max(num_stages, 1))
     bwd = num_stages if bwd_stages is None else max(0, min(bwd_stages,
                                                            num_stages))
     # per-device step totals, averaged over stages (bwd truncation only

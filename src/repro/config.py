@@ -341,23 +341,72 @@ def snap_depth(cfg: ModelConfig, depth: int) -> int:
     return L - best
 
 
+def _flat_unit_lens(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Layer count of every scanned unit, flattened over the groups."""
+    lens: list = []
+    for unit, count in combined_layer_groups(cfg):
+        lens.extend([len(unit)] * count)
+    return tuple(lens)
+
+
+def stage_unit_cuts(cfg: ModelConfig, num_stages: int) -> Tuple[int, ...]:
+    """Balanced contiguous partition of the flat unit list into stages.
+
+    Returns ``num_stages + 1`` unit-index boundaries: stage ``s`` holds
+    units ``[cuts[s], cuts[s+1])``.  Each cut greedily minimizes the
+    layer-count deviation from the ideal ``total * s / num_stages``
+    (earliest cut wins ties), subject to every stage getting at least one
+    unit.  A homogeneous stack whose unit count divides evenly reproduces
+    the classic equal split.  Deterministic in (cfg, num_stages) — part of
+    the engine step signature.
+    """
+    lens = _flat_unit_lens(cfg)
+    n = len(lens)
+    if num_stages <= 0 or num_stages > n:
+        raise ValueError(f"{n} scanned units cannot fill {num_stages} "
+                         f"pipeline stages")
+    csum = [0]
+    for u in lens:
+        csum.append(csum[-1] + u)
+    total = csum[-1]
+    cuts = [0]
+    for s in range(1, num_stages):
+        lo = cuts[-1] + 1
+        hi = n - (num_stages - s)
+        target = total * s / num_stages
+        cuts.append(min(range(lo, hi + 1),
+                        key=lambda i: (abs(csum[i] - target), i)))
+    cuts.append(n)
+    return tuple(cuts)
+
+
+def stage_layer_counts(cfg: ModelConfig, num_stages: int) -> Tuple[int, ...]:
+    """Layers per pipeline stage under :func:`stage_unit_cuts`."""
+    lens = _flat_unit_lens(cfg)
+    cuts = stage_unit_cuts(cfg, num_stages)
+    return tuple(sum(lens[a:b]) for a, b in zip(cuts, cuts[1:]))
+
+
 def snap_depth_to_stages(cfg: ModelConfig, depth: int,
                          num_stages: int) -> int:
     """Snap an SPB suffix depth UP to a pipeline-stage boundary.
 
     Under pipeline parallelism the truncation point must be a stage
     boundary (the last ``j`` stages run backward, the first ``k - j``
-    forward-only), so a depth of ``d`` layers becomes
-    ``ceil(d / layers_per_stage)`` live stages — like :func:`snap_depth`,
-    the snap is always toward *more* backprop, never less.
+    forward-only), so a depth of ``d`` layers becomes the layer count of
+    the shortest stage suffix covering it — like :func:`snap_depth`, the
+    snap is always toward *more* backprop, never less.  Stages may be
+    heterogeneous (:func:`stage_layer_counts`); the only hard requirement
+    is ``num_stages <=`` the number of scanned units.
     """
-    L = total_layers(cfg)
-    if num_stages <= 0 or L % num_stages:
-        raise ValueError(f"{L} layers not divisible by {num_stages} "
-                         f"pipeline stages")
-    per = L // num_stages
-    depth = max(1, min(depth, L))
-    return -(-depth // per) * per
+    counts = stage_layer_counts(cfg, num_stages)
+    depth = max(1, min(depth, total_layers(cfg)))
+    acc = 0
+    for c in reversed(counts):
+        acc += c
+        if acc >= depth:
+            break
+    return acc
 
 
 def depth_to_bwd_stages(cfg: ModelConfig, depth: Optional[int],
@@ -370,5 +419,12 @@ def depth_to_bwd_stages(cfg: ModelConfig, depth: Optional[int],
     """
     if depth is None:
         return num_stages
-    per = total_layers(cfg) // num_stages
-    return snap_depth_to_stages(cfg, depth, num_stages) // per
+    counts = stage_layer_counts(cfg, num_stages)
+    depth = max(1, min(depth, total_layers(cfg)))
+    acc, live = 0, 0
+    for c in reversed(counts):
+        acc += c
+        live += 1
+        if acc >= depth:
+            break
+    return live

@@ -44,7 +44,7 @@ in ``core/spb.py``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -71,19 +71,30 @@ def _mesh_data_axis(mesh, data_axis: Optional[str]) -> Optional[str]:
     return "data" if "data" in names else None
 
 
-def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
+def run_schedule(sched: Schedule,
+                 stage_fn: Union[Callable, Sequence[Callable]],
+                 stage_params, xs, *,
                  loss_fn: Optional[Callable] = None, ys=None,
                  head_params=None, axis_name: str = "stage",
                  data_axis: Optional[str] = None,
                  capture_input_grads: bool = False,
                  param_specs=None, tensor_axis: Optional[str] = None,
                  sequence_parallel: bool = False,
-                 zero2: bool = False) -> Dict[str, Any]:
+                 zero2: bool = False, stage_aux: bool = False,
+                 aux_weight: float = 0.0) -> Dict[str, Any]:
     """Interpret ``sched`` over the ambient mesh's ``axis_name`` axis.
 
     stage_params: pytree whose leaves are stacked ``(S, ...)`` (one slice
     per stage, sharded over ``axis_name``); ``stage_fn(w, x) -> y`` with
-    ``y.shape == x.shape``; ``xs``: ``(M, mb, ...)`` microbatches.  When
+    ``y.shape == x.shape`` — or a sequence of per-stage callables
+    (heterogeneous stages: ``stage.make_stage_fns``), where stage ``s``
+    traces only ``stage_fn[s]``; ``xs``: ``(M, mb, ...)`` microbatches.
+    With ``stage_aux`` every stage fn returns ``(y, aux)`` (a scalar
+    auxiliary loss, e.g. the MoE router term): the aux values accumulate
+    across stages and microbatches into the result's ``aux`` (a mean over
+    microbatches), and each backward seeds its VJP with the extra
+    cotangent ``aux_weight / M`` so d(loss + aux_weight * aux)/d(params)
+    flows without the aux scalar ever crossing a stage boundary.  When
     the mesh has a ``data`` axis (or ``data_axis`` names one), the
     microbatch dim ``mb`` is sharded over it and gradients/loss average
     across the data shards.  With ``loss_fn(head_params, y, ys[m]) ->
@@ -114,6 +125,10 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
     microbatch.
     """
     s_, m_ = sched.num_stages, sched.num_microbatches
+    stage_fns = (list(stage_fn) if isinstance(stage_fn, (list, tuple))
+                 else [stage_fn] * s_)
+    if len(stage_fns) != s_:
+        raise ValueError(f"{len(stage_fns)} stage fns for {s_} stages")
     train = loss_fn is not None
     has_bwd = sched.bwd_stages > 0
     if has_bwd and not train:
@@ -196,12 +211,15 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         dw = jax.tree.map(jnp.zeros_like, w)
         head_dw = jax.tree.map(jnp.zeros_like, head_params)
         loss_acc = jnp.zeros((), jnp.float32)
+        aux_acc = jnp.zeros((), jnp.float32)
         recv_act = jnp.zeros(mb_shape, dt)
         recv_cot = jnp.zeros(mb_shape, dt)
 
         inv_m = 1.0 / m_
+        aux_ct = jnp.asarray(aux_weight * inv_m, jnp.float32)
 
         def make_branch(t: int, s: int):
+            fn = stage_fns[s]
             first, last = s == 0, s == s_ - 1
             in_act_m = fwd_at[t - 1][s - 1] if (t > 0 and not first) else None
             in_cot_m = bwd_at[t - 1][s + 1] if (t > 0 and not last) else None
@@ -215,7 +233,7 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
 
             def branch(carry):
                 (recv_act, recv_cot, act_stash, cot_stash, outs, in_grads,
-                 dw, head_dw, loss_acc) = carry
+                 dw, head_dw, loss_acc, aux_acc) = carry
                 if in_act_slot is not None:
                     act_stash = act_stash.at[in_act_slot].set(recv_act)
                 if in_cot_slot is not None:
@@ -229,7 +247,11 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                         x_in = recv_act     # wire, not the stash
                     else:
                         x_in = act_stash[plan.act_slot[(s, fm)]]
-                    y = stage_fn(w, x_in)
+                    if stage_aux:
+                        y, aux_v = fn(w, x_in)
+                        aux_acc = aux_acc + aux_v.astype(jnp.float32) * inv_m
+                    else:
+                        y = fn(w, x_in)
                     y_send = y
                     if last:
                         outs = outs.at[fm].set(y)
@@ -254,20 +276,21 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                             dy = recv_cot   # consumed on arrival
                         else:
                             dy = cot_stash[plan.cot_slot[(s, bm)]]
+                        cot = (dy, aux_ct) if stage_aux else dy
                         if need_dx[s]:
                             _, vjp_fn = jax.vjp(
-                                lambda ww, xx: stage_fn(ww, xx), w, x_b)
-                            dwi, dxi = vjp_fn(dy)
+                                lambda ww, xx: fn(ww, xx), w, x_b)
+                            dwi, dxi = vjp_fn(cot)
                             dx_send = dxi
                             if first:
                                 in_grads = in_grads.at[bm].set(dxi)
                         else:
                             _, vjp_fn = jax.vjp(
-                                lambda ww: stage_fn(ww, x_b), w)
-                            (dwi,) = vjp_fn(dy)
+                                lambda ww: fn(ww, x_b), w)
+                            (dwi,) = vjp_fn(cot)
                         dw = jax.tree.map(jnp.add, dw, dwi)
                 return (y_send, dx_send, act_stash, cot_stash, outs,
-                        in_grads, dw, head_dw, loss_acc)
+                        in_grads, dw, head_dw, loss_acc, aux_acc)
 
             return branch
 
@@ -275,9 +298,9 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         left = [(i, i - 1) for i in range(1, s_)]
         for t in range(sched.num_ticks):
             carry = (recv_act, recv_cot, act_stash, cot_stash, outs,
-                     in_grads, dw, head_dw, loss_acc)
+                     in_grads, dw, head_dw, loss_acc, aux_acc)
             (y_send, dx_send, act_stash, cot_stash, outs, in_grads, dw,
-             head_dw, loss_acc) = lax.switch(
+             head_dw, loss_acc, aux_acc) = lax.switch(
                 idx, [make_branch(t, s) for s in range(s_)], carry)
             if s_ > 1 and t + 1 < sched.num_ticks:
                 if any(x is not None for x in fwd_at[t]):
@@ -289,6 +312,9 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
         # zeros they were initialized with, so a plain psum broadcasts.
         outs = lax.psum(outs, axis_name)
         loss = lax.psum(loss_acc, axis_name) * inv_m
+        # each stage accumulated only its own layers' aux: sum across the
+        # pipe (already averaged over microbatches via inv_m)
+        aux = lax.psum(aux_acc, axis_name)
         in_grads = lax.psum(in_grads, axis_name)
         head_dw = lax.psum(head_dw, axis_name)
         if tensor_axis is not None and sequence_parallel:
@@ -315,21 +341,23 @@ def run_schedule(sched: Schedule, stage_fn: Callable, stage_params, xs, *,
                 dw = lax.pmean(dw, d_axis)
             head_dw = lax.pmean(head_dw, d_axis)
             loss = lax.pmean(loss, d_axis)
+            aux = lax.pmean(aux, d_axis)
             in_grads = in_grads * (1.0 / d_size)
         dw = jax.tree.map(lambda t_: t_[None], dw)
-        return outs, loss, dw, head_dw, in_grads
+        return outs, loss, aux, dw, head_dw, in_grads
 
     batch_spec = P(None, d_axis) if d_axis else P()
     # the ys placeholder for forward-only runs stays minimal (and
     # replicated — only real labels shard over the data axis)
     ys_spec = batch_spec if ys is not None else P()
     ys_in = ys if ys is not None else jnp.zeros((m_, 1), xs.dtype)
-    outs, loss, stage_grads, head_grads, input_grads = jax.shard_map(
+    outs, loss, aux, stage_grads, head_grads, input_grads = jax.shard_map(
         body, mesh=mesh,
         in_specs=(p_specs, batch_spec, ys_spec, P()),
-        out_specs=(batch_spec, P(), g_specs, P(), batch_spec),
+        out_specs=(batch_spec, P(), P(), g_specs, P(), batch_spec),
         check_vma=False)(stage_params, xs, ys_in, head_params)
-    return {"outs": outs, "loss": loss, "stage_grads": stage_grads,
+    return {"outs": outs, "loss": loss, "aux": aux,
+            "stage_grads": stage_grads,
             "head_grads": head_grads, "input_grads": input_grads,
             "stash_slots": (plan.act_slots, plan.cot_slots)}
 
@@ -355,7 +383,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, xs,
                         axis_name=axis_name)["outs"]
 
 
-def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
+def pipeline_train_grads(sched: Schedule,
+                         stage_fn: Union[Callable, Sequence[Callable]],
+                         stage_params,
                          xs, ys, loss_fn: Callable, *, head_params=None,
                          axis_name: str = "stage",
                          data_axis: Optional[str] = None,
@@ -363,7 +393,8 @@ def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
                          param_specs=None,
                          tensor_axis: Optional[str] = None,
                          sequence_parallel: bool = False,
-                         zero2: bool = False) -> Dict[str, Any]:
+                         zero2: bool = False, stage_aux: bool = False,
+                         aux_weight: float = 0.0) -> Dict[str, Any]:
     """One pipelined forward+backward pass per the schedule table.
 
     Returns ``{'loss', 'stage_grads', 'head_grads', 'input_grads',
@@ -384,7 +415,8 @@ def pipeline_train_grads(sched: Schedule, stage_fn: Callable, stage_params,
                         data_axis=data_axis,
                         capture_input_grads=capture_input_grads,
                         param_specs=param_specs, tensor_axis=tensor_axis,
-                        sequence_parallel=sequence_parallel, zero2=zero2)
+                        sequence_parallel=sequence_parallel, zero2=zero2,
+                        stage_aux=stage_aux, aux_weight=aux_weight)
 
 
 def sequential_reference(stage_fn: Callable, stage_params, xs):

@@ -26,34 +26,123 @@ demand.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.config import ModelConfig, layer_groups, total_layers
+from repro.config import (ModelConfig, layer_groups, stage_unit_cuts,
+                          total_layers)
 from repro.models import layers as L
 from repro.models import lm
 
 
-def check_pipeline_compatible(cfg: ModelConfig, num_stages: int) -> None:
-    """Pipeline stages slice the scanned decoder stack, so the model must
-    be a single homogeneous stack whose unit count divides evenly."""
+# ---------------------------------------------------------------------------
+# Stage maps: contiguous slices of possibly-heterogeneous layer groups
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageMap:
+    """How the scanned layer groups partition into pipeline stages.
+
+    ``segments[s]`` lists this stage's ``(group, unit_start, unit_count)``
+    slices — at most one contiguous slice per group, in stack order.
+    ``caps[g]`` is the widest slice any stage takes from group ``g``: the
+    stage-stacked leaf for that group is ``(S, caps[g], ...)`` with each
+    stage's real units packed at rows ``[0:count]`` and zero rows beyond
+    (never read — every stage fn statically slices its own count).
+    """
+    num_stages: int
+    segments: Tuple[Tuple[Tuple[int, int, int], ...], ...]
+    caps: Tuple[int, ...]
+
+    @property
+    def trivial(self) -> bool:
+        """One group, evenly split: the classic reshape partition."""
+        return len(self.caps) == 1 and self.uniform[0]
+
+    @property
+    def uniform(self) -> Tuple[bool, ...]:
+        """Per group: does every stage take exactly ``count/S`` units (so
+        the stage-stacked leaf is a pure reshape, safely shardable over
+        the ``stage`` mesh axis)?"""
+        out = []
+        for g, cap in enumerate(self.caps):
+            segs = [seg for stage in self.segments for seg in stage
+                    if seg[0] == g]
+            total = sum(cnt for _g, _st, cnt in segs)
+            out.append(len(segs) == self.num_stages
+                       and all(cnt == cap for _g, _st, cnt in segs)
+                       and total == cap * self.num_stages)
+        return tuple(out)
+
+
+def build_stage_map(cfg: ModelConfig, num_stages: int) -> StageMap:
+    """Balanced contiguous partition of the decoder stack into stages
+    (cuts from ``config.stage_unit_cuts`` — whole units only, layer
+    counts balanced)."""
+    if cfg.enc_layers:
+        raise ValueError(f"{cfg.name}: encoder-decoder stacks are not "
+                         "pipeline-partitionable")
     groups = layer_groups(cfg)
+    # flat unit index -> (group, local unit index)
+    owners: List[Tuple[int, int]] = []
+    for g, (_unit, count) in enumerate(groups):
+        owners.extend((g, i) for i in range(count))
+    cuts = stage_unit_cuts(cfg, num_stages)
+    segments = []
+    for a, b in zip(cuts, cuts[1:]):
+        segs: List[Tuple[int, int, int]] = []
+        for g, i in owners[a:b]:
+            if segs and segs[-1][0] == g:
+                segs[-1] = (g, segs[-1][1], segs[-1][2] + 1)
+            else:
+                segs.append((g, i, 1))
+        segments.append(tuple(segs))
+    caps = []
+    for g in range(len(groups)):
+        caps.append(max((cnt for stage in segments
+                         for gg, _st, cnt in stage if gg == g), default=0))
+    return StageMap(num_stages=num_stages, segments=tuple(segments),
+                    caps=tuple(caps))
+
+
+def render_stage_map(cfg: ModelConfig, num_stages: int) -> str:
+    """Human-readable stage table (used by the docs' live doctests)."""
+    smap = build_stage_map(cfg, num_stages)
+    groups = layer_groups(cfg)
+    lines = []
+    for s, segs in enumerate(smap.segments):
+        parts, nl = [], 0
+        for g, start, cnt in segs:
+            unit, _count = groups[g]
+            nl += cnt * len(unit)
+            kinds = "+".join(m for m, _f in unit)
+            parts.append(f"g{g}[{start}:{start + cnt}]x{len(unit)}({kinds})")
+        lines.append(f"stage {s}: {' '.join(parts)}  [{nl} layers]")
+    return "\n".join(lines)
+
+
+def check_pipeline_compatible(cfg: ModelConfig, num_stages: int) -> None:
+    """Pipeline stages slice the scanned decoder stack by whole units, so
+    the stack must be decoder-only with at least ``num_stages`` units.
+    Heterogeneous groups and dense-impl MoE are fine (stages carry the
+    router aux loss through the schedule runtime); expert-parallel MoE is
+    not — its all_to_all lives in a nested ``shard_map``."""
     problems = []
     if cfg.enc_layers:
         problems.append("encoder-decoder stacks (enc_layers > 0)")
     if cfg.frontend:
         problems.append("modality frontends")
-    if cfg.moe is not None:
-        problems.append("MoE stacks (aux loss crosses stage boundaries)")
-    if len(groups) != 1:
-        problems.append(f"heterogeneous layer groups ({len(groups)} scan "
-                        f"groups; pipeline stages need one)")
-    elif groups[0][1] % num_stages:
-        problems.append(f"{groups[0][1]} scan units not divisible by "
-                        f"{num_stages} stages")
+    if cfg.moe is not None and cfg.moe.impl == "ep":
+        problems.append("expert-parallel MoE (nested shard_map; use "
+                        "impl='dense')")
+    n_units = sum(count for _u, count in layer_groups(cfg))
+    if num_stages <= 0 or num_stages > n_units:
+        problems.append(f"{n_units} scan units cannot fill {num_stages} "
+                        f"stages")
     if problems:
         raise ValueError(f"{cfg.name}: not pipeline-partitionable — "
                          + "; ".join(problems))
@@ -69,9 +158,8 @@ def check_tensor_parallel_compatible(cfg: ModelConfig,
     if model_parallel <= 1:
         return
     problems = []
-    (unit, _count) = layer_groups(cfg)[0]
-    mixers = {m for m, _f in unit}
-    ffns = {f for _m, f in unit}
+    mixers = {m for unit, _c in layer_groups(cfg) for m, _f in unit}
+    ffns = {f for unit, _c in layer_groups(cfg) for _m, f in unit}
     bad = sorted(mixers - {"attn", "local"})
     if bad:
         problems.append(f"mixer kinds {bad} have no tensor-parallel path")
@@ -117,30 +205,85 @@ def layers_per_stage(cfg: ModelConfig, num_stages: int) -> int:
     return l_ // num_stages
 
 
+def _as_stage_map(cfg: ModelConfig, stages: Union[int, StageMap]) -> StageMap:
+    return stages if isinstance(stages, StageMap) else \
+        build_stage_map(cfg, stages)
+
+
 def stack_stage_params(groups: List[Any], cfg: ModelConfig,
-                       num_stages: int):
-    """``params['groups']`` -> stage-stacked pytree: every ``(count, ...)``
-    leaf becomes ``(S, count/S, ...)``.  When the leading axis is already
-    sharded over ``stage`` this reshape is layout-preserving (the split
-    dim aligns with the shard boundaries)."""
-    (g,) = groups
-    return jax.tree.map(
-        lambda t: t.reshape((num_stages, t.shape[0] // num_stages)
-                            + t.shape[1:]), g)
+                       stages: Union[int, StageMap]):
+    """``params['groups']`` -> stage-stacked pytree.
+
+    Trivial maps (one group, evenly split) reshape every ``(count, ...)``
+    leaf to ``(S, count/S, ...)`` exactly as before — layout-preserving
+    when the leading axis is sharded over ``stage``.  Heterogeneous maps
+    return ``{"g0": ..., "g1": ...}`` with ``(S, caps[g], ...)`` leaves:
+    stage ``s``'s real units from group ``g`` packed at rows
+    ``[0:count]``, zero rows beyond (never read — the per-stage fns slice
+    statically, so pad-row gradients are identically zero)."""
+    smap = _as_stage_map(cfg, stages)
+    if smap.trivial:
+        (g,) = groups
+        s_ = smap.num_stages
+        return jax.tree.map(
+            lambda t: t.reshape((s_, t.shape[0] // s_) + t.shape[1:]), g)
+
+    uniform = smap.uniform
+    out: Dict[str, Any] = {}
+    for g, gtree in enumerate(groups):
+        cap = smap.caps[g]
+        if uniform[g]:
+            out[f"g{g}"] = jax.tree.map(
+                lambda t: t.reshape((smap.num_stages, cap) + t.shape[1:]),
+                gtree)
+            continue
+        per_stage = []          # (start, count) per stage, 0-wide allowed
+        for segs in smap.segments:
+            hit = [(st, cnt) for gg, st, cnt in segs if gg == g]
+            per_stage.append(hit[0] if hit else (0, 0))
+
+        def stack_leaf(t, per_stage=per_stage, cap=cap):
+            rows = []
+            for st, cnt in per_stage:
+                blk = t[st:st + cnt]
+                if cnt < cap:
+                    pad = jnp.zeros((cap - cnt,) + t.shape[1:], t.dtype)
+                    blk = jnp.concatenate([blk, pad], axis=0)
+                rows.append(blk)
+            return jnp.stack(rows)
+
+        out[f"g{g}"] = jax.tree.map(stack_leaf, gtree)
+    return out
 
 
-def unstack_stage_grads(stage_grads, cfg: ModelConfig, num_stages: int
-                        ) -> List[Any]:
+def unstack_stage_grads(stage_grads, cfg: ModelConfig,
+                        stages: Union[int, StageMap]) -> List[Any]:
     """Inverse of :func:`stack_stage_params`, back to ``params['groups']``
-    layout so the optimizer sees the gradient tree it expects."""
-    return [jax.tree.map(
-        lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
-        stage_grads)]
+    layout so the optimizer sees the gradient tree it expects.  Pad rows
+    are dropped (their gradients are zero by construction)."""
+    smap = _as_stage_map(cfg, stages)
+    if smap.trivial:
+        return [jax.tree.map(
+            lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+            stage_grads)]
+    out = []
+    for g in range(len(smap.caps)):
+        pieces = []             # (stage, count) in unit order
+        for s, segs in enumerate(smap.segments):
+            for gg, _st, cnt in segs:
+                if gg == g:
+                    pieces.append((s, cnt))
+        out.append(jax.tree.map(
+            lambda t, pieces=pieces: jnp.concatenate(
+                [t[s, :cnt] for s, cnt in pieces], axis=0),
+            stage_grads[f"g{g}"]))
+    return out
 
 
 def make_stage_fn(cfg: ModelConfig, *, tp_axis: str = None,
                   sequence_parallel: bool = False) -> Callable:
-    """One pipeline stage: scan this stage's slice of decoder units.
+    """One pipeline stage of a trivial (single homogeneous group) map:
+    scan this stage's slice of decoder units.
 
     ``w`` is the per-stage gparams tree (``(count/S, ...)`` leaves), as
     handed out by the schedule runtime; ``x`` is ``(mb, seq, d_model)``.
@@ -167,6 +310,43 @@ def make_stage_fn(cfg: ModelConfig, *, tp_axis: str = None,
         return x
 
     return stage_fn
+
+
+def make_stage_fns(cfg: ModelConfig, stages: Union[int, StageMap], *,
+                   tp_axis: str = None,
+                   sequence_parallel: bool = False) -> List[Callable]:
+    """Per-stage callables for a (possibly heterogeneous) stage map.
+
+    Stage ``s`` statically slices its real units from each group's
+    stage-stacked leaves (``w[f"g{g}"][:count]`` — pad rows never read)
+    and runs them in stack order.  Every stage returns ``(x, aux)`` so
+    MoE router losses ride the schedule runtime's aux channel
+    (``run_schedule(..., stage_aux=True)``)."""
+    smap = _as_stage_map(cfg, stages)
+    groups = layer_groups(cfg)
+
+    def one(s: int) -> Callable:
+        segs = smap.segments[s]
+
+        def stage_fn(w, x):
+            positions = jnp.arange(x.shape[1])
+            aux = jnp.zeros((), jnp.float32)
+            wg = {"g0": w} if smap.trivial else w
+            if tp_axis is not None and sequence_parallel:
+                x = L.sp_slice(x, tp_axis, 1)
+            for g, _start, cnt in segs:
+                unit, _count = groups[g]
+                gp = jax.tree.map(lambda t: t[:cnt], wg[f"g{g}"])
+                x, aux = lm.run_group_train(
+                    x, aux, gp, unit, cfg, positions, tp_axis=tp_axis,
+                    sequence_parallel=sequence_parallel)
+            if tp_axis is not None and sequence_parallel:
+                x = L.sp_unslice(x, tp_axis, 1)
+            return x, aux
+
+        return stage_fn
+
+    return [one(s) for s in range(smap.num_stages)]
 
 
 def make_head_loss(cfg: ModelConfig) -> Callable:

@@ -413,13 +413,20 @@ def _with_stage_dim0(spec: P, leaf, stage_axes) -> P:
 
 
 def pipeline_state_pspec(state_shapes: Any, mesh=None, *,
-                        zero1: bool = False):
+                        zero1: bool = False, uniform_groups=None):
     """Train-state specs for a pipeline session: the scanned layer stacks
     (every leaf under ``groups``, in params *and* optimizer moments)
     additionally shard their leading layer axis over the mesh's ``stage``
     axis — each device holds exactly its stage's slice of weights,
     moments and master copies.  Everything else (embedding, head, step)
     stays on the normal rule table, replicated across stages.
+
+    Heterogeneous stage maps (``pipeline.stage.build_stage_map``) may
+    split a group *unevenly* across stages; such a group's leading axis
+    no longer aligns with the ``stage`` shards, so it stays replicated.
+    ``uniform_groups`` (per-group bools, ``StageMap.uniform``) marks
+    which groups split evenly; independent of it, a leading dim that the
+    stage-axis size does not divide is never stage-sharded.
 
     On a 2-D ``(stage, data)`` mesh the two compositions layer cleanly:
     the ``stage`` rule claims the leading layer dim *first*, then ZeRO-1
@@ -434,12 +441,23 @@ def pipeline_state_pspec(state_shapes: Any, mesh=None, *,
     if not len(stage_spec):                # no stage axis on this mesh
         return state_pspec(state_shapes, mesh=mesh, zero1=zero1)
     (stage_axes,) = stage_spec
+    sizes = dict(getattr(mesh, "shape", {}) or {})
+    ssize = 1
+    for ax in (stage_axes if isinstance(stage_axes, tuple) else (stage_axes,)):
+        ssize *= int(sizes.get(ax, 1))
     base = state_pspec(state_shapes, mesh=mesh, zero1=False)
 
     def add(path, spec, leaf):
-        if "groups" in _path_keys(path):
-            return _with_stage_dim0(spec, leaf, stage_axes)
-        return spec
+        keys = _path_keys(path)
+        if "groups" not in keys:
+            return spec
+        if uniform_groups is not None:
+            g = int(keys[keys.index("groups") + 1])
+            if not (g < len(uniform_groups) and uniform_groups[g]):
+                return spec
+        if ssize > 1 and leaf.shape and leaf.shape[0] % ssize:
+            return spec                    # uneven leading dim: replicate
+        return _with_stage_dim0(spec, leaf, stage_axes)
 
     out = jax.tree_util.tree_map_with_path(
         add, base, state_shapes, is_leaf=lambda x: isinstance(x, P))

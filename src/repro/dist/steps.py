@@ -304,8 +304,10 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     bwd_stages = depth_to_bwd_stages(cfg, depth, num_stages)
     sched = pp.schedules.build(schedule, num_stages, m,
                                bwd_stages=bwd_stages)
-    stage_fn = pp.stage.make_stage_fn(cfg, tp_axis=tp_axis,
-                                      sequence_parallel=sequence_parallel)
+    stage_map = pp.stage.build_stage_map(cfg, num_stages)
+    stage_fns = pp.stage.make_stage_fns(cfg, stage_map, tp_axis=tp_axis,
+                                        sequence_parallel=sequence_parallel)
+    aux_weight = 0.01 if cfg.moe is not None else 0.0  # lm.loss_fn default
     head_loss = pp.stage.make_head_loss(cfg)
     embed_live = bwd_stages == num_stages   # stage 0 backprops -> so does
                                             # the embedding lookup
@@ -337,16 +339,17 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         xs = x.reshape((m, b // m) + x.shape[1:])
         ys = labels.reshape((m, b // m) + labels.shape[1:])
         stacked = pp.stage.stack_stage_params(params["groups"], cfg,
-                                              num_stages)
+                                              stage_map)
         pspecs = (pp.stage.stage_param_specs(stacked, mesh=mesh,
                                              axis_name=axis_name)
                   if tp > 1 else None)
         res = pp.runtime.pipeline_train_grads(
-            sched, stage_fn, stacked, xs, ys, head_loss,
+            sched, stage_fns, stacked, xs, ys, head_loss,
             head_params=pp.stage.head_params_of(params),
             axis_name=axis_name, capture_input_grads=embed_live,
             param_specs=pspecs, tensor_axis=tp_axis,
-            sequence_parallel=sequence_parallel, zero2=zero2)
+            sequence_parallel=sequence_parallel, zero2=zero2,
+            stage_aux=True, aux_weight=aux_weight)
 
         head_grads = res["head_grads"]
         d_embed = head_grads["embed"]          # tied unembedding path
@@ -357,11 +360,11 @@ def make_pipeline_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         grads = {
             "embed": d_embed,
             "groups": pp.stage.unstack_stage_grads(res["stage_grads"], cfg,
-                                                   num_stages),
+                                                   stage_map),
             "final_norm": head_grads["final_norm"],
         }
-        metrics = {"loss": res["loss"], "xent": res["loss"],
-                   "moe_aux": jnp.zeros((), jnp.float32)}
+        metrics = {"loss": res["loss"] + aux_weight * res["aux"],
+                   "xent": res["loss"], "moe_aux": res["aux"]}
         gspecs = (_pipeline_grad_specs(grads, mesh, zero2)
                   if (tp > 1 or zero2) else None)
         return _finish_step(state, grads, metrics, tcfg, cfg, spb_cfg,

@@ -140,6 +140,14 @@ class SPBEngine:
             if self.spb.pipeline_stages != self.pipeline_stages:
                 self.spb = dataclasses.replace(
                     self.spb, pipeline_stages=self.pipeline_stages)
+            # heterogeneous stage maps (per-group unit slices) change
+            # which param groups get a leading stage dim in the stacked
+            # state — sharding specs need the per-group uniformity flags
+            from repro.dist.pipeline import stage as pp_stage
+            pp_stage.check_pipeline_compatible(cfg, self.pipeline_stages)
+            self._stage_map = pp_stage.build_stage_map(
+                cfg, self.pipeline_stages)
+            self._uniform_groups = self._stage_map.uniform
         else:
             if tensor_parallel not in (None, 1) or sequence_parallel or zero2:
                 raise ValueError("tensor_parallel / sequence_parallel / "
@@ -151,6 +159,8 @@ class SPBEngine:
             self.tensor_parallel = 0
             self.sequence_parallel = False
             self.zero2 = False
+            self._stage_map = None
+            self._uniform_groups = None
         self.donate = donate
         self.zero1 = zero1
         self.shared_cache = shared_cache
@@ -195,7 +205,8 @@ class SPBEngine:
             # stage; 1 when the session mesh is stage-only
             self.pipeline_data = self.parallel.num_dp
             self.state_specs = shd.pipeline_state_pspec(
-                self.state_shapes, mesh=mesh, zero1=self.zero1)
+                self.state_shapes, mesh=mesh, zero1=self.zero1,
+                uniform_groups=self._uniform_groups)
         else:
             self.state_specs = shd.state_pspec(
                 self.state_shapes, mesh=mesh, zero1=self.zero1)

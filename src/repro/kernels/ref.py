@@ -37,14 +37,13 @@ def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
     return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
 
 
-def ssd_ref(xdt: Array, dA: Array, B_: Array, C: Array) -> Array:
-    """Sequential SSD recurrence (the definitional oracle).
+def ssd_ref_with_state(xdt: Array, dA: Array, B_: Array, C: Array
+                       ) -> tuple[Array, Array]:
+    """Sequential SSD recurrence returning (y, final_state).
 
-    xdt: (B, S, H, P) — inputs pre-multiplied by dt
-    dA:  (B, S, H)    — dt * A (negative)
-    B_, C: (B, S, H, N)
-    Returns y: (B, S, H, P) f32.
-    h_t = exp(dA_t) * h_{t-1} + B_t^T xdt_t ;  y_t = C_t h_t
+    Same math as ``ssd_ref`` but also returns the final carried state
+    (B, H, P, N) — the differentiable oracle for the Pallas ``ops.ssd``
+    custom VJP, whose public signature returns both.
     """
     Bb, S, H, P = xdt.shape
     N = B_.shape[-1]
@@ -61,8 +60,20 @@ def ssd_ref(xdt: Array, dA: Array, B_: Array, C: Array) -> Array:
           dA.swapaxes(0, 1).astype(jnp.float32),
           B_.swapaxes(0, 1).astype(jnp.float32),
           C.swapaxes(0, 1).astype(jnp.float32))
-    _, ys = jax.lax.scan(step, h0, xs)
-    return ys.swapaxes(0, 1)
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), hT
+
+
+def ssd_ref(xdt: Array, dA: Array, B_: Array, C: Array) -> Array:
+    """Sequential SSD recurrence (the definitional oracle).
+
+    xdt: (B, S, H, P) — inputs pre-multiplied by dt
+    dA:  (B, S, H)    — dt * A (negative)
+    B_, C: (B, S, H, N)
+    Returns y: (B, S, H, P) f32.
+    h_t = exp(dA_t) * h_{t-1} + B_t^T xdt_t ;  y_t = C_t h_t
+    """
+    return ssd_ref_with_state(xdt, dA, B_, C)[0]
 
 
 def rglru_ref(a: Array, b: Array) -> Array:

@@ -1,0 +1,79 @@
+"""Pallas TPU backward kernel for the RG-LRU linear recurrence.
+
+Forward: h_t = a_t * h_{t-1} + b_t.  The reverse-mode recurrence is the
+same shape run backwards in time with the roles swapped:
+
+    lam_t = dy_t + a_{t+1} * lam_{t+1}     (lam_{S} = 0)
+    db_t  = lam_t
+    da_t  = lam_t * h_{t-1}                (h_{-1} = 0)
+
+so the backward is itself a linear scan — chunked exactly like the
+forward (``rglru.py``) but with the sequential grid dimension walked in
+**reverse** and the carry ``a_{t0} * lam_{t0}`` of the chunk entered from
+the right held in VMEM scratch.  ``h_{t-1}`` arrives as the pre-shifted
+forward output (``y_prev``), the only residual the backward needs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_bwd_kernel(a_ref, yp_ref, dy_ref, da_ref, db_ref, carry_scr, *,
+                      chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    def body(i, carry):
+        t = chunk - 1 - i
+        lam = dy_ref[0, t, :][None, :].astype(jnp.float32) + carry  # (1, bw)
+        db_ref[0, t, :] = lam[0].astype(db_ref.dtype)
+        da_ref[0, t, :] = (lam[0] *
+                           yp_ref[0, t, :].astype(jnp.float32)
+                           ).astype(da_ref.dtype)
+        return a_ref[0, t, :][None, :].astype(jnp.float32) * lam
+
+    carry_scr[...] = lax.fori_loop(0, chunk, body, carry_scr[...])
+
+
+def bwd_kernel_layout(a, y_prev, dy, *, chunk: int = 128,
+                      width_block: int = 128, interpret: bool = False):
+    """a, y_prev, dy: (B, S, W).  Returns (da, db): (B, S, W) f32."""
+    B, S, W = a.shape
+    chunk = min(chunk, S)
+    width_block = min(width_block, W)
+    assert S % chunk == 0 and W % width_block == 0
+    nc = S // chunk
+    nw = W // width_block
+
+    rev = lambda bb, w, c: (bb, nc - 1 - c, w)  # noqa: E731
+    kernel = functools.partial(_rglru_bwd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, width_block), rev),
+            pl.BlockSpec((1, chunk, width_block), rev),
+            pl.BlockSpec((1, chunk, width_block), rev),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, width_block), rev),
+            pl.BlockSpec((1, chunk, width_block), rev),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, width_block), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, y_prev, dy)

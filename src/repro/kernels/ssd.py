@@ -58,26 +58,17 @@ def _ssd_kernel(xdt_ref, dA_ref, b_ref, c_ref, y_ref, state_out_ref,
         state_out_ref[0] = state_scr[...]
 
 
-def ssd_scan(xdt, dA, B_, C, *, chunk: int = 128, interpret: bool = False):
-    """Chunked SSD scan.
+def ssd_fwd_kernel_layout(xr, dr, br, cr, *, chunk: int,
+                          interpret: bool = False):
+    """Forward scan on kernel-native layouts.
 
-    xdt: (B, S, H, P) f32-ish (inputs pre-multiplied by dt)
-    dA:  (B, S, H)
-    B_, C: (B, S, H, N) (already broadcast over groups)
-    Returns (y: (B, S, H, P) f32, final_state: (B, H, P, N) f32).
+    xr: (B*H, S, P); dr: (B*H, S, 1); br, cr: (B*H, S, N).
+    Returns (y: (B*H, S, P) f32, final_state: (B*H, P, N) f32).
     """
-    Bb, S, H, P = xdt.shape
-    N = B_.shape[-1]
-    chunk = min(chunk, S)
+    BH, S, P = xr.shape
+    N = br.shape[-1]
     assert S % chunk == 0
     nc = S // chunk
-    BH = Bb * H
-
-    # (B*H, S, ...) layouts
-    xr = xdt.transpose(0, 2, 1, 3).reshape(BH, S, P)
-    dr = dA.transpose(0, 2, 1).reshape(BH, S, 1)
-    br = B_.transpose(0, 2, 1, 3).reshape(BH, S, N)
-    cr = C.transpose(0, 2, 1, 3).reshape(BH, S, N)
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
     y, state = pl.pallas_call(
@@ -102,6 +93,31 @@ def ssd_scan(xdt, dA, B_, C, *, chunk: int = 128, interpret: bool = False):
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xr, dr, br, cr)
+    return y, state
+
+
+def ssd_scan(xdt, dA, B_, C, *, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD scan.
+
+    xdt: (B, S, H, P) f32-ish (inputs pre-multiplied by dt)
+    dA:  (B, S, H)
+    B_, C: (B, S, H, N) (already broadcast over groups)
+    Returns (y: (B, S, H, P) f32, final_state: (B, H, P, N) f32).
+    """
+    Bb, S, H, P = xdt.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    BH = Bb * H
+
+    # (B*H, S, ...) layouts
+    xr = xdt.transpose(0, 2, 1, 3).reshape(BH, S, P)
+    dr = dA.transpose(0, 2, 1).reshape(BH, S, 1)
+    br = B_.transpose(0, 2, 1, 3).reshape(BH, S, N)
+    cr = C.transpose(0, 2, 1, 3).reshape(BH, S, N)
+
+    y, state = ssd_fwd_kernel_layout(xr, dr, br, cr, chunk=chunk,
+                                     interpret=interpret)
     y = y.reshape(Bb, H, S, P).transpose(0, 2, 1, 3)
     state = state.reshape(Bb, H, P, N)
     return y, state

@@ -115,6 +115,9 @@ def train(argv=None):
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a failure at this step (tests)")
     ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route SSM scans (SSD / RG-LRU) through the "
+                         "Pallas kernels (interpret mode on CPU)")
     args = ap.parse_args(argv)
 
     cc_before = None
@@ -123,6 +126,9 @@ def train(argv=None):
         cc_before = stepcache.enable_persistent_compilation_cache(
             args.compilation_cache_dir)
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.use_pallas:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, use_pallas=True)
     tcfg = TrainConfig(learning_rate=args.lr, optimizer=args.optimizer,
                        num_steps=args.steps, microbatches=args.microbatches,
                        compression=args.compression,

@@ -131,6 +131,30 @@ def _ssd_scan(xh: Array, dA: Array, Bm: Array, Cm: Array, state0: Array,
     return y, state
 
 
+def _use_pallas_ssd(cfg: ModelConfig, S: int, P: int, N: int) -> bool:
+    """Route the train/prefill scan through the Pallas SSD kernel?
+
+    Mirrors ``layers._pallas_attention``: opt-in via ``cfg.use_pallas``;
+    on TPU additionally require MXU-friendly tiling (interpret mode on
+    other backends handles any shape).
+    """
+    if not cfg.use_pallas:
+        return False
+    if jax.default_backend() == "tpu":
+        Q = min(cfg.ssm.chunk, S)
+        return Q % 8 == 0 and P % 8 == 0 and N % 128 == 0
+    return True
+
+
+def _use_pallas_rglru(cfg: ModelConfig, S: int, W: int) -> bool:
+    if not cfg.use_pallas:
+        return False
+    if jax.default_backend() == "tpu":
+        Q = min(cfg.lru.block_width, S)
+        return Q % 8 == 0 and W % 128 == 0
+    return True
+
+
 def mamba2_core(p: Params, x: Array, cfg: ModelConfig, state0=None):
     """Shared train/prefill path.  x: (B,S,D) -> (y, final_state, conv_tail)."""
     s: SSMConfig = cfg.ssm
@@ -148,11 +172,17 @@ def mamba2_core(p: Params, x: Array, cfg: ModelConfig, state0=None):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
     A = -jnp.exp(p["A_log"])                                      # (H,)
     dA = dt * A
-    if state0 is None:
-        state0 = jnp.zeros((B_, H, P, N), jnp.float32)
     # big tensors stay in the storage dtype (decays/state are f32 inside)
-    y, state = _ssd_scan(xh * dt[..., None].astype(xh.dtype), dA,
-                         Bm, Cm, state0, s.chunk)
+    if state0 is None and _use_pallas_ssd(cfg, S, P, N):
+        from repro.kernels import ops as _K
+        y, state = _K.ssd(xh * dt[..., None].astype(xh.dtype), dA,
+                          Bm, Cm, chunk=s.chunk)
+        y = y.astype(xh.dtype)
+    else:
+        if state0 is None:
+            state0 = jnp.zeros((B_, H, P, N), jnp.float32)
+        y, state = _ssd_scan(xh * dt[..., None].astype(xh.dtype), dA,
+                             Bm, Cm, state0, s.chunk)
     y = y + (p["D"].astype(xh.dtype)[None, None, :, None] * xh)
     y = y.reshape(B_, S, d_in).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
@@ -291,9 +321,14 @@ def rglru_core(p: Params, x: Array, cfg: ModelConfig, h0=None):
     xc = jax.nn.silu(causal_conv(xb, p["conv_w"], p["conv_b"]))
     xf = xc.astype(jnp.float32)
     a, gated = _rglru_gates(p, xf)
-    if h0 is None:
-        h0 = jnp.zeros((B_, W), jnp.float32)
-    h, hT = _lru_scan(a, gated, h0, l.block_width)
+    if h0 is None and _use_pallas_rglru(cfg, S, W):
+        from repro.kernels import ops as _K
+        h = _K.rglru(a, gated, chunk=l.block_width)
+        hT = h[:, -1]
+    else:
+        if h0 is None:
+            h0 = jnp.zeros((B_, W), jnp.float32)
+        h, hT = _lru_scan(a, gated, h0, l.block_width)
     y = (h.astype(x.dtype) * z) @ p["out_proj"]
     conv_tail = xb[:, -(l.d_conv - 1):]
     return y, hT, conv_tail

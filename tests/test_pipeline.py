@@ -198,8 +198,36 @@ def test_depth_to_stage_truncation_mapping():
     assert depth_to_bwd_stages(cfg, 1, 2) == 1
     assert depth_to_bwd_stages(cfg, 3, 2) == 2
     assert depth_to_bwd_stages(cfg, 1, 4) == 1
+    # heterogeneous partition: 4 layers over 3 stages -> [1, 2, 1]
+    assert snap_depth_to_stages(cfg, 1, 3) == 1   # deepest stage alone
+    assert snap_depth_to_stages(cfg, 2, 3) == 3   # spans two stages
+    assert snap_depth_to_stages(cfg, 4, 3) == 4
+    assert depth_to_bwd_stages(cfg, 1, 3) == 1
+    assert depth_to_bwd_stages(cfg, 3, 3) == 2
     with pytest.raises(ValueError):
-        snap_depth_to_stages(cfg, 1, 3)           # 4 layers, 3 stages
+        snap_depth_to_stages(cfg, 1, 5)           # 4 units, 5 stages
+
+
+def test_stage_map_heterogeneous_groups():
+    """build_stage_map slices multi-group configs into contiguous
+    per-stage segments; render_stage_map names each slice."""
+    from repro.dist.pipeline import stage as st
+    cfg = reduced_config("yi-6b")
+    smap = st.build_stage_map(cfg, 2)
+    assert smap.trivial                           # 1 group, even split
+    assert st.stack_stage_params.__doc__          # public surface
+    # 3 stages on 4 uniform units: [1, 2, 1] -> no longer trivial
+    smap3 = st.build_stage_map(cfg, 3)
+    assert not smap3.trivial and smap3.uniform == (False,)
+    ds = reduced_config("deepseek-v2-lite-16b")   # 2 groups, 3 units
+    smap_ds = st.build_stage_map(ds, 2)
+    assert not smap_ds.trivial
+    counts = [sum(cnt for _, _, cnt in segs) for segs in smap_ds.segments]
+    assert sum(counts) == 3 and len(counts) == 2
+    out = st.render_stage_map(ds, 2)
+    assert "stage 0" in out and "stage 1" in out and "g0[" in out
+    with pytest.raises(ValueError):
+        st.build_stage_map(ds, 4)                 # 3 units, 4 stages
 
 
 def test_snapped_depths_respect_pipeline_stages():
@@ -450,6 +478,42 @@ def test_hlo_has_zero_bwd_work_for_frozen_stages():
     scope is absent from the compiled HLO, and total flops/bytes shrink
     (asserted with analysis/hlo.py's scan-aware cost model)."""
     _run_sub(_HLO_SCRIPT, 2, "HLO_ELISION_OK")
+
+
+_SSM_HLO_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    from repro.analysis import hlo
+    from repro.config import SPBConfig, TrainConfig
+    from repro.configs import make_batch, reduced_config
+    from repro.engine import SPBEngine
+
+    # 4 SSD layers over 2 stages, scans routed through the Pallas
+    # kernels so truncation must elide the *custom-VJP* backward
+    cfg = dataclasses.replace(reduced_config("mamba2-2.7b"),
+                              use_pallas=True)
+    tcfg = TrainConfig(optimizer="adamw", microbatches=2)
+    eng = SPBEngine(cfg, tcfg, SPBConfig(mode="temporal", k=2),
+                    parallelism="pipeline", donate=False)
+    specs = eng.batch_specs_like(make_batch(cfg, 4, 32))
+    full = eng.lower_step(specs, depth=4).compile().as_text()
+    trunc = eng.lower_step(specs, depth=2).compile().as_text()
+    assert "pipeline_bwd_stage0" in full and "pipeline_bwd_stage1" in full
+    assert "pipeline_bwd_stage1" in trunc
+    assert "pipeline_bwd_stage0" not in trunc
+    c_full, c_trunc = hlo.analyze(full), hlo.analyze(trunc)
+    assert c_trunc.flops < c_full.flops, (c_trunc.flops, c_full.flops)
+    assert c_trunc.bytes < c_full.bytes
+    print("SSM_HLO_ELISION_OK")
+""")
+
+
+@pytest.mark.slow
+def test_ssm_pipeline_hlo_elides_frozen_kernel_bwd():
+    """The Pallas SSD scan's custom VJP never reaches HLO for frozen
+    stages: a truncated mamba2 stage stack compiles with zero backward
+    ops below the truncation point, exactly like the transformer case."""
+    _run_sub(_SSM_HLO_SCRIPT, 2, "SSM_HLO_ELISION_OK")
 
 
 _ENGINE_SCRIPT = textwrap.dedent("""
